@@ -1,0 +1,77 @@
+"""Figure 10a: search-space composition ablation on fused-dense.
+
+Progressively richer module sets tuned with identical budgets; the paper's
+claim: each added module improves the best found program.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from repro.core.modules import (
+    AutoInline,
+    MultiLevelTiling,
+    ParallelizeVectorizeUnroll,
+    RandomComputeLocation,
+    UseMXU,
+)
+from repro.search.evolutionary import SearchConfig
+from repro.search.tune import tune_workload
+
+SPACES = [
+    ("mlt", [MultiLevelTiling()]),
+    ("mlt+inline", [AutoInline(), MultiLevelTiling()]),
+    (
+        "mlt+inline+pvu",
+        [AutoInline(), MultiLevelTiling(), ParallelizeVectorizeUnroll()],
+    ),
+    (
+        "mlt+inline+pvu+loc",
+        [
+            AutoInline(),
+            MultiLevelTiling(),
+            RandomComputeLocation(),
+            ParallelizeVectorizeUnroll(),
+        ],
+    ),
+    (
+        "+use_mxu",
+        [
+            AutoInline(),
+            UseMXU(),
+            MultiLevelTiling(),
+            RandomComputeLocation(),
+            ParallelizeVectorizeUnroll(),
+        ],
+    ),
+]
+
+SHAPE = dict(m=128, n=512, k=256)
+
+
+def run(csv: bool = True) -> List[Dict]:
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "24"))
+    cfg = SearchConfig(
+        max_trials=trials,
+        init_random=max(trials // 4, 4),
+        population=max(trials // 2, 8),
+        measure_per_round=max(trials // 4, 4),
+    )
+    out = []
+    for label, modules in SPACES:
+        res = tune_workload("fused_dense", SHAPE, modules=modules, config=cfg)
+        row = {
+            "space": label,
+            "tuned_us": res.best_latency_s * 1e6,
+            "baseline_us": res.baseline_latency_s * 1e6,
+        }
+        out.append(row)
+        if csv:
+            print(f"composition/{label},{row['tuned_us']:.2f},"
+                  f"baseline={row['baseline_us']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Figure 8: operator/subgraph performance — MetaSchedule-tuned vs the
+naive-jnp (XLA) lowering of the same tensor program.
+
+The paper's 12 Appendix-A.2 workloads.  Shapes follow A.2 except the conv
+monsters (C2D/C3D/DIL/CBR), which are scaled so a CPU tuning run finishes
+in minutes; the tuned-vs-baseline comparison semantics is unchanged.
+Set REPRO_BENCH_TRIALS to scale search effort.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from repro.search.database import Database
+from repro.search.evolutionary import SearchConfig
+from repro.search.tune import tune_workload
+
+# (workload, shape kwargs, use_mxu)
+BENCH_OPS = [
+    ("c1d", dict(), False),
+    ("c2d", dict(h=56, w=56, cin=3, cout=16, ksize=7, stride=2, pad=3), False),
+    ("c3d", dict(d=8, h=28, w=28, cin=3, cout=8, ksize=3, stride=1, pad=1), False),
+    ("dep", dict(h=56, w=56, c=32), False),
+    ("dil", dict(h=56, w=56, cin=3, cout=16, ksize=3, stride=1, pad=2, dilation=2), False),
+    ("gmm", dict(n=128, m=128, k=128), True),
+    ("grp", dict(h=28, w=28, cin=32, cout=32, groups=4, ksize=3, stride=1, pad=1), False),
+    ("t2d", dict(h=4, w=4, cin=64, cout=32), False),
+    ("cbr", dict(h=56, w=56, cin=3, cout=16, ksize=7, stride=2, pad=3), False),
+    ("tbg", dict(seq=128, head=12, dim=64), True),
+    ("nrm", dict(m=256, n=256), False),
+    ("sfm", dict(m=256, n=256), False),
+]
+
+
+def _config() -> SearchConfig:
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "24"))
+    return SearchConfig(
+        max_trials=trials,
+        init_random=max(trials // 4, 4),
+        population=max(trials // 2, 8),
+        measure_per_round=max(trials // 4, 4),
+        generations=3,
+    )
+
+
+def run(db_path: str = "results/tuning_db.json", csv: bool = True) -> List[Dict]:
+    db = Database(db_path)
+    out = []
+    for name, kwargs, mxu in BENCH_OPS:
+        res = tune_workload(
+            name, kwargs, use_mxu=mxu, config=_config(), database=db
+        )
+        row = {
+            "op": name,
+            "tuned_us": res.best_latency_s * 1e6,
+            "default_us": res.default_latency_s * 1e6,
+            "xla_us": res.baseline_latency_s * 1e6,
+            "speedup_vs_default": res.speedup_vs_default,
+            "speedup_vs_xla": res.speedup_vs_baseline,
+            "trials": res.trials,
+            "tuning_s": res.tuning_time_s,
+        }
+        out.append(row)
+        if csv:
+            print(
+                f"operators/{name},{row['tuned_us']:.2f},"
+                f"default={row['default_us']:.2f};xla={row['xla_us']:.2f};"
+                f"speedup_vs_default={row['speedup_vs_default']:.2f}x"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,144 @@
+"""Roofline analysis from the compiled dry-run (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), single-pod mesh (per assignment):
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs uses the trip-count-corrected dot count (hlo_analysis.py);
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for the useful-compute
+ratio.  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(rec: Dict) -> float:
+    """6·N·D tokens rule (fwd 2ND + bwd 4ND); serve steps use 2·N·tokens."""
+    meta = rec.get("meta", {})
+    n_active = meta.get("active_params", meta.get("params", 0))
+    seq, batch = meta.get("seq_len", 0), meta.get("global_batch", 0)
+    kind = meta.get("kind", "train")
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * batch
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    corr = rec.get("corrected", {})
+    flops = corr.get("dot_flops") or rec["cost"]["flops"] or 0.0
+    # cost_analysis flops/bytes are per-program as partitioned (per-device)
+    byts = rec["cost"]["bytes_accessed"] or 0.0
+    raw_flops = rec["cost"]["flops"] or 0.0
+    # scale bytes by the same trip-count correction factor as flops
+    corr_factor = flops / raw_flops if raw_flops else 1.0
+    byts = byts * corr_factor
+    coll = corr.get("collectives") or rec["collectives"]
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec)
+    mf_per_dev = mf / n
+    useful = mf_per_dev / flops if flops else 0.0
+    total = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful model flops at peak vs modeled step time
+    frac = (mf_per_dev / PEAK_FLOPS) / total if total > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "devices": n,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_per_dev,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib": (rec["memory"]["peak_bytes"] or 0) / 2**30,
+    }
+
+
+def load_rows(results_dir: str = RESULTS_DIR, mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    if not os.path.isdir(results_dir):
+        return rows
+    for f in sorted(os.listdir(results_dir)):
+        if not f.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(results_dir, f)))
+        if rec.get("mesh") != mesh:
+            continue
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | coll s | dominant | "
+        "useful | roofline frac | peak GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_gib']:.2f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_opt")
+
+
+def run(csv: bool = True) -> List[Dict]:
+    rows = load_rows()
+    opt = {(r["arch"], r["shape"]): r for r in load_rows(OPT_DIR)}
+    if csv:
+        for r in rows:
+            dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            o = opt.get((r["arch"], r["shape"]))
+            extra = (
+                f";opt_frac={o['roofline_fraction']:.3f}"
+                f";opt_coll_s={o['collective_s']:.3g}" if o else ""
+            )
+            print(
+                f"roofline/{r['arch']}/{r['shape']},{dom_s*1e6:.2f},"
+                f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}"
+                + extra
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    print()
+    print(markdown_table(rows))

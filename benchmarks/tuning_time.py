@@ -1,0 +1,45 @@
+"""Table 1: tuning time.  Wall-clock per trial and trials/sec of the
+search loop across representative workloads (the paper compares
+MetaSchedule vs Ansor minutes at equal trial budgets)."""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from repro.search.evolutionary import SearchConfig
+from repro.search.tune import tune_workload
+
+WORKLOADS = [
+    ("gmm", dict(n=128, m=128, k=128), True),
+    ("fused_dense", dict(m=128, n=512, k=256), True),
+    ("sfm", dict(m=256, n=256), False),
+]
+
+
+def run(csv: bool = True) -> List[Dict]:
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "16"))
+    cfg = SearchConfig(
+        max_trials=trials, init_random=max(trials // 4, 4),
+        population=max(trials // 2, 8), measure_per_round=max(trials // 4, 4),
+    )
+    out = []
+    for name, kwargs, mxu in WORKLOADS:
+        res = tune_workload(name, kwargs, use_mxu=mxu, config=cfg)
+        row = {
+            "workload": name,
+            "trials": res.trials,
+            "tuning_s": res.tuning_time_s,
+            "s_per_trial": res.tuning_time_s / max(res.trials, 1),
+        }
+        out.append(row)
+        if csv:
+            print(
+                f"tuning_time/{name},{row['s_per_trial']*1e6:.0f},"
+                f"trials={row['trials']};total_s={row['tuning_s']:.1f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Figure 10b: hardware-specific module value — Use-MXU on a BERT-style
+fused dense (the paper reports 48% speedup from Use-Tensor-Core).
+
+Same budget with and without the UseMXU module composed into the space.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+from repro.core.modules import default_modules
+from repro.search.evolutionary import SearchConfig
+from repro.search.tune import tune_workload
+
+SHAPE = dict(m=128, n=1024, k=256)  # BERT-large-ish ffn tile, CPU-scaled
+
+
+def run(csv: bool = True) -> Dict:
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "24"))
+    cfg = SearchConfig(
+        max_trials=trials,
+        init_random=max(trials // 4, 4),
+        population=max(trials // 2, 8),
+        measure_per_round=max(trials // 4, 4),
+    )
+    base = tune_workload(
+        "fused_dense", SHAPE, modules=default_modules(use_mxu=False), config=cfg
+    )
+    mxu = tune_workload(
+        "fused_dense", SHAPE, modules=default_modules(use_mxu=True), config=cfg
+    )
+    speedup = base.best_latency_s / mxu.best_latency_s
+    out = {
+        "generic_us": base.best_latency_s * 1e6,
+        "use_mxu_us": mxu.best_latency_s * 1e6,
+        "speedup_pct": (speedup - 1) * 100,
+    }
+    if csv:
+        print(
+            f"use_mxu/fused_dense,{out['use_mxu_us']:.2f},"
+            f"generic={out['generic_us']:.2f};gain={out['speedup_pct']:.1f}%"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

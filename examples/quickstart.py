@@ -1,0 +1,52 @@
+"""Quickstart: construct a probabilistic search space for a matmul and
+tune it with the learning-driven search (paper Figures 3 + 7 end-to-end).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.workloads import gmm
+from repro.core.schedule import Schedule
+from repro.core.modules import SpaceGenerator, default_modules
+from repro.search.tune import tune_workload
+from repro.search.evolutionary import SearchConfig
+from repro.search.database import Database
+
+
+def manual_schedule_demo():
+    """The paper's Figure 3: 7 lines cover a family of tensor programs."""
+    func = gmm(n=128, m=128, k=128)
+    sch = Schedule(func, seed=0)
+    C = sch.get_block("C")
+    i, j, k = sch.get_loops(C)
+    ti = sch.sample_perfect_tile(i, n=2, max_innermost_factor=64)
+    tj = sch.sample_perfect_tile(j, n=2, max_innermost_factor=64)
+    i0, i1 = sch.split(i, ti)
+    j0, j1 = sch.split(j, tj)
+    sch.reorder(i0, j0, i1, j1)
+    sch.parallel(sch.fuse(i0, j0))
+    sch.unroll(i1)
+    sch.vectorize(j1)
+    print("=== sampled schedule (Figure 3) ===")
+    print(sch.script())
+    print("\n=== recorded trace (Figure 6) ===")
+    print(sch.trace.as_python())
+
+
+def tuned_search_demo():
+    db = Database("/tmp/quickstart_db.json")
+    res = tune_workload(
+        "gmm", dict(n=128, m=128, k=128), use_mxu=True,
+        config=SearchConfig(max_trials=32, init_random=8, population=12,
+                            measure_per_round=8),
+        database=db, verbose=True,
+    )
+    print(f"\nbest latency      : {res.best_latency_s*1e6:9.1f} us")
+    print(f"naive-jnp baseline: {res.baseline_latency_s*1e6:9.1f} us")
+    print(f"speedup           : {res.speedup_vs_baseline:9.2f}x")
+    print(f"trials            : {res.trials}, {res.tuning_time_s:.1f}s")
+
+
+if __name__ == "__main__":
+    manual_schedule_demo()
+    tuned_search_demo()

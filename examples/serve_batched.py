@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + decode a smoke model with the KV
+cache engine (the decode_* dry-run cells lower exactly this step).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as serve_launcher
+
+if __name__ == "__main__":
+    serve_launcher.main([
+        "--arch", "gemma2-2b", "--requests", "8",
+        "--prompt-len", "32", "--new-tokens", "12", "--max-batch", "4",
+    ])

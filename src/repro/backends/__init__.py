@@ -1,0 +1,1 @@
+from . import jnp_backend  # noqa: F401

@@ -1,0 +1,111 @@
+"""Analytical TPU cost model for scheduled tensor programs.
+
+This container has no TPU, so when the search targets TPU (instead of
+measured CPU latency) it scores schedules with a three-term roofline
+derived from the schedule structure:
+
+  compute  — FLOPs / (MXU rate if tensorized & aligned, else VPU rate),
+  memory   — HBM bytes moved (tile traffic incl. re-fetch across the
+             iterated reduce dimension — the cost BlockSpec staging pays),
+  total    — max of the two (+ fixed per-grid-step overhead).
+
+Constants are TPU v5e: 197 TFLOP/s bf16 (MXU), ~3 TFLOP/s VPU fp32,
+819 GB/s HBM.  The same module provides the hardware constants used by the
+launch-time roofline analysis (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from ..core.schedule import BlockNode, LoopNode, Schedule
+from ..core.tir import REDUCE
+
+# TPU v5e hardware constants (per chip)
+PEAK_BF16_FLOPS = 197e12        # MXU bf16
+PEAK_F32_FLOPS = 98.5e12        # MXU fp32
+VPU_FLOPS = 3.2e12              # vector unit, elementwise
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 5.0e10                 # bytes/s per link (~50 GB/s)
+VMEM_BYTES = 64 << 20           # usable VMEM per core (conservative)
+GRID_STEP_OVERHEAD = 1e-7       # s per grid step (DMA issue etc.)
+
+
+@dataclass
+class RooflineEstimate:
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+    dominant: str
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.overhead_s
+
+
+def estimate_schedule(sch: Schedule, dtype_bytes: int = 4) -> RooflineEstimate:
+    from .jnp_backend import _tile_suffix
+
+    compute_s = 0.0
+    memory_s = 0.0
+    overhead_s = 0.0
+
+    def walk(nodes, path: List[LoopNode]):
+        nonlocal compute_s, memory_s, overhead_s
+        for n in nodes:
+            if isinstance(n, LoopNode):
+                walk(n.body, path + [n])
+                continue
+            bn: BlockNode = n
+            blk = bn.block
+            tile = _tile_suffix(path, bn)
+            tile_vars = {l.var for l in tile}
+            n_iter = int(
+                np.prod([l.extent for l in path if l.var not in tile_vars] or [1])
+            )
+            flops = blk.flops()
+            mxu = bn.annotations.get("tensorize") == "mxu"
+            aligned = all(l.extent % 8 == 0 for l in tile[-1:]) if tile else False
+            rate = (
+                PEAK_BF16_FLOPS * (1.0 if aligned else 0.25)
+                if mxu
+                else VPU_FLOPS
+            )
+            compute_s += flops / rate
+            # memory: every iterated step refetches its operand tiles
+            tile_elems = int(np.prod([l.extent for l in tile] or [1]))
+            per_step_bytes = dtype_bytes * tile_elems * (len(blk.reads()) + 1)
+            memory_s += n_iter * per_step_bytes / HBM_BW
+            overhead_s += n_iter * GRID_STEP_OVERHEAD
+
+    walk(sch.root, [])
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    return RooflineEstimate(compute_s, memory_s, overhead_s, dominant)
+
+
+class AnalyticalRunner:
+    """Drop-in for LocalRunner when targeting TPU without hardware:
+    ``measure`` returns the roofline estimate instead of wall time."""
+
+    def __init__(self, dtype_bytes: int = 4):
+        self.dtype_bytes = dtype_bytes
+
+    def measure(self, sch: Schedule):
+        from ..search.runner import MeasureResult
+
+        try:
+            est = estimate_schedule(sch, self.dtype_bytes)
+            return MeasureResult(est.total_s)
+        except Exception as e:
+            return MeasureResult(float("inf"), str(e))
+
+    def baseline(self, func) -> float:
+        # ideal roofline: all flops at MXU peak, all bytes moved once
+        flops = func.total_flops()
+        byts = sum(b.nbytes for b in func.inputs) + sum(
+            b.nbytes for b in func.outputs
+        )
+        return max(flops / PEAK_BF16_FLOPS, byts / HBM_BW)

@@ -1,0 +1,612 @@
+"""Lower a scheduled loop tree to an executable JAX function.
+
+This backend is the measurement substrate for the learning-driven search on
+CPU: the generated function *structurally follows the schedule* — iterated
+loops become ``lax.fori_loop``s, vectorize/unroll-marked inner loops become
+array (tile) dimensions, MXU-tensorized blocks contract their tiles with
+``jnp.einsum`` (systolic-array path) while unmarked blocks use the
+broadcast-multiply-reduce (VPU) path.  Tiling, loop order, fusion and
+tensorization therefore genuinely move measured latency, which is the
+signal the paper's evolutionary search consumes.
+
+Tile-boundary rule (documented in DESIGN.md §3): walking a block's loop
+chain from the innermost loop upward, a loop is a *tile dimension* while its
+kind is ``vectorize`` or ``unroll`` (single-child chain); the first other
+loop ends the tile.  Everything above is *iterated*.
+
+Also provides :func:`build_oracle` — a whole-domain vectorized lowering of
+the *unscheduled* PrimFunc (einsum for contractions) used both as the
+correctness oracle and as the "default jnp" baseline in benchmarks.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.schedule import BlockNode, LoopNode, Node, Schedule, iter_nodes
+from ..core.tir import (
+    BinOp,
+    Block,
+    Buffer,
+    Const,
+    Expr,
+    IterVar,
+    LinExpr,
+    Load,
+    PrimFunc,
+    REDUCE,
+    ScheduleError,
+    Select,
+    UnOp,
+)
+
+BINOP_JNP = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "pow": jnp.power,
+}
+
+UNOP_JNP = {
+    "exp": jnp.exp,
+    "sqrt": jnp.sqrt,
+    "rsqrt": lambda x: jax.lax.rsqrt(x),
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "neg": jnp.negative,
+    "tanh": jnp.tanh,
+    "log": jnp.log,
+    "abs": jnp.abs,
+    "sigmoid": jax.nn.sigmoid,
+    "erf": jax.lax.erf,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "silu": jax.nn.silu,
+}
+
+REDUCE_JNP = {"add": jnp.sum, "max": jnp.max, "min": jnp.min}
+REDUCE_INIT = {"add": 0.0, "max": -1e30, "min": 1e30}
+
+TILE_KINDS = ("vectorize", "unroll")
+
+
+# ---------------------------------------------------------------------------
+# Compiled-schedule metadata
+# ---------------------------------------------------------------------------
+
+
+class LoweredSchedule:
+    """Executable + static structure info for features/analysis."""
+
+    def __init__(self, fn, func: PrimFunc, iterated_count: int, tile_elems: int):
+        self.fn = fn  # callable(dict inputs) -> dict outputs (jit-able)
+        self.func = func
+        self.iterated_count = iterated_count  # total loop iterations emitted
+        self.tile_elems = tile_elems  # max joint tile size
+
+    def jit(self):
+        return jax.jit(self.fn)
+
+
+def _tile_suffix(path_loops: List[LoopNode], bn: BlockNode) -> List[LoopNode]:
+    """Maximal suffix of the enclosing chain with tile kinds + single-child."""
+    out: List[LoopNode] = []
+    # walk from innermost upward; loops must form a single-child chain
+    for i in range(len(path_loops) - 1, -1, -1):
+        ln = path_loops[i]
+        if ln.kind not in TILE_KINDS:
+            break
+        if len(ln.body) != 1:
+            break
+        out.append(ln)
+    out.reverse()
+    return out
+
+
+def estimate_iteration_count(sch: Schedule) -> int:
+    """Total number of fori_loop iterations the lowering will execute."""
+    total = [0]
+
+    # determine tile loops globally
+    tile_vars = set()
+
+    def collect(nodes: List[Node], path: List[LoopNode]):
+        for n in nodes:
+            if isinstance(n, LoopNode):
+                collect(n.body, path + [n])
+            else:
+                for ln in _tile_suffix(path, n):
+                    tile_vars.add(ln.var)
+
+    collect(sch.root, [])
+
+    def count(nodes: List[Node], mult: int):
+        for n in nodes:
+            if isinstance(n, LoopNode):
+                if n.var in tile_vars:
+                    count(n.body, mult)
+                else:
+                    total[0] += mult * n.extent
+                    count(n.body, mult * n.extent)
+
+    count(sch.root, 1)
+    return max(total[0], 1)
+
+
+# ---------------------------------------------------------------------------
+# Expression evaluation over a tile
+# ---------------------------------------------------------------------------
+
+
+def _axis_letters():
+    import string
+
+    return string.ascii_letters
+
+
+def _eval_linexpr(e: LinExpr, env: Dict[str, Any]):
+    out = e.const
+    for t in e.terms:
+        v = env[t.var]
+        if t.div != 1:
+            v = v // t.div
+        if t.mod is not None:
+            v = v % t.mod
+        out = out + t.coef * v
+    return out
+
+
+class _TileCtx:
+    """Evaluation context for one block instance.
+
+    ``env`` maps iterated loop vars to scalar ints (python or traced);
+    ``tile_vars`` is the ordered list of (var, extent) forming the tile.
+    """
+
+    def __init__(self, env: Dict[str, Any], tile_vars: List[Tuple[str, int]]):
+        self.env = env
+        self.tile_vars = tile_vars
+        self.rank = len(tile_vars)
+        self.shape = tuple(e for _, e in tile_vars)
+        self.pos = {v: i for i, (v, _) in enumerate(tile_vars)}
+
+    def index_env(self) -> Dict[str, Any]:
+        """env + broadcast-ready aranges for tile vars."""
+        out = dict(self.env)
+        for i, (v, e) in enumerate(self.tile_vars):
+            shape = [1] * self.rank
+            shape[i] = e
+            out[v] = jnp.arange(e, dtype=jnp.int32).reshape(shape)
+        return out
+
+    def scalar_env(self) -> Dict[str, Any]:
+        """env + zeros for tile vars (for extracting offsets)."""
+        out = dict(self.env)
+        for v, _ in self.tile_vars:
+            out[v] = 0
+        return out
+
+
+def _load_tile(ld: Load, ctx: _TileCtx, clamp: bool) -> jnp.ndarray:
+    """Gather a load's tile as an array broadcastable to ctx.shape."""
+    arr_idx = []
+    ienv = ctx.index_env()
+    for dim, ix in enumerate(ld.indices):
+        v = _eval_linexpr(ix, ienv)
+        if not hasattr(v, "shape"):
+            v = jnp.asarray(v, dtype=jnp.int32)
+        if clamp:
+            v = jnp.clip(v, 0, ld.buffer.shape[dim] - 1)
+        arr_idx.append(v)
+    if not arr_idx:
+        return None  # scalar buffer? not supported
+    bcast = jnp.broadcast_arrays(*arr_idx)
+    return lambda buf: buf[tuple(bcast)]
+
+
+def _eval_expr_tile(
+    e: Expr, ctx: _TileCtx, bufs: Dict[str, jnp.ndarray], clamp: bool = False
+):
+    if isinstance(e, Const):
+        return jnp.float32(e.value)
+    if isinstance(e, IterVar):
+        return _eval_linexpr(LinExpr.var(e.name), ctx.index_env()).astype(jnp.float32)
+    if isinstance(e, Load):
+        g = _load_tile(e, ctx, clamp)
+        return g(bufs[e.buffer.name])
+    if isinstance(e, BinOp):
+        return BINOP_JNP[e.op](
+            _eval_expr_tile(e.a, ctx, bufs, clamp), _eval_expr_tile(e.b, ctx, bufs, clamp)
+        )
+    if isinstance(e, UnOp):
+        return UNOP_JNP[e.op](_eval_expr_tile(e.a, ctx, bufs, clamp))
+    if isinstance(e, Select):
+        ienv = ctx.index_env()
+        cond = None
+        for bexpr, n in e.bounds:
+            v = _eval_linexpr(bexpr, ienv)
+            if not hasattr(v, "shape"):
+                v = jnp.asarray(v)
+            c = jnp.logical_and(v >= 0, v < n)
+            cond = c if cond is None else jnp.logical_and(cond, c)
+        a = _eval_expr_tile(e.a, ctx, bufs, clamp=True)
+        b = _eval_expr_tile(e.b, ctx, bufs, clamp)
+        a, b = jnp.broadcast_arrays(jnp.asarray(a), jnp.asarray(b))
+        cond = jnp.broadcast_to(cond, a.shape)
+        return jnp.where(cond, a, b)
+    raise TypeError(f"cannot lower {type(e)}")
+
+
+def _einsum_tile(blk: Block, bindings, ctx: _TileCtx, bufs, r_tile_vars) -> jnp.ndarray:
+    """MXU path: contract the two loads of a matmul-pattern block with einsum.
+
+    Each load is gathered with *its own* dims (the tile vars it references,
+    in tile order) and the contraction runs over the reduce tile vars —
+    modeling a systolic-array matmul instead of broadcast-multiply-reduce.
+    """
+    letters = _axis_letters()
+    var_letter = {v: letters[i] for i, (v, _) in enumerate(ctx.tile_vars)}
+
+    def gather_own(ld: Load):
+        own_vars = []
+        for ix in ld.indices:
+            for v in ix.vars():
+                if v in var_letter and v not in own_vars:
+                    own_vars.append(v)
+        own_vars.sort(key=lambda v: ctx.pos[v])
+        sub_ctx = _TileCtx(ctx.env, [(v, dict(ctx.tile_vars)[v]) for v in own_vars])
+        g = _load_tile(ld, sub_ctx, clamp=False)
+        arr = g(bufs[ld.buffer.name])
+        arr = jnp.broadcast_to(arr, sub_ctx.shape)
+        return arr, "".join(var_letter[v] for v in own_vars)
+
+    a_arr, a_sub = gather_own(blk.expr.a)
+    b_arr, b_sub = gather_own(blk.expr.b)
+    r_vars = {v for v, _ in r_tile_vars}
+    out_vars = [v for v, _ in ctx.tile_vars if v not in r_vars]
+    present = set(a_sub) | set(b_sub)
+    kept = [v for v in out_vars if var_letter[v] in present]
+    spec = f"{a_sub},{b_sub}->{''.join(var_letter[v] for v in kept)}"
+    res = jnp.einsum(spec, a_arr, b_arr, preferred_element_type=jnp.float32)
+    if len(kept) != len(out_vars):
+        # spatial tile vars that index no operand: broadcast them back in
+        ext = dict(ctx.tile_vars)
+        for pos, v in enumerate(out_vars):
+            if v not in kept:
+                res = jnp.expand_dims(res, pos)
+        res = jnp.broadcast_to(res, tuple(ext[v] for v in out_vars))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Block instance emission
+# ---------------------------------------------------------------------------
+
+
+def _classify_tile_vars(bn: BlockNode, tile_loops: List[LoopNode]):
+    """Split the tile loops into (spatial, reduce) according to bindings."""
+    blk = bn.block
+    r_axis = {a.name for a in blk.reduce_axes}
+    r_vars, s_vars = [], []
+    for ln in tile_loops:
+        feeds_r = False
+        feeds_s = False
+        for ax in blk.axes:
+            if ln.var in bn.bindings[ax.name].vars():
+                if ax.kind == REDUCE:
+                    feeds_r = True
+                else:
+                    feeds_s = True
+        if feeds_r and feeds_s:
+            raise ScheduleError(f"tile loop {ln.var} feeds both S and R axes")
+        (r_vars if feeds_r else s_vars).append((ln.var, ln.extent))
+    return s_vars, r_vars
+
+
+def _emit_block(bn: BlockNode, tile_loops: List[LoopNode], env, bufs):
+    """Evaluate one block instance and write its tile into buffers."""
+    blk = bn.block
+    s_tile, r_tile = _classify_tile_vars(bn, tile_loops)
+    tile_vars = [(ln.var, ln.extent) for ln in tile_loops]
+    ctx = _TileCtx(env, tile_vars)
+
+    # substitute bindings into expr indices: loads use axis names -> loop exprs
+    from ..core.schedule import _substitute_expr_axes
+
+    expr = _substitute_expr_axes(blk.expr, bn.bindings)
+
+    if bn.annotations.get("tensorize") == "mxu" and isinstance(expr, BinOp):
+        val = _einsum_tile(
+            Block(
+                name=blk.name,
+                axes=blk.axes,
+                expr=expr,
+                write=blk.write,
+                write_indices=blk.write_indices,
+                reduce_op=blk.reduce_op,
+                init=blk.init,
+            ),
+            bn.bindings,
+            ctx,
+            bufs,
+            r_tile,
+        )
+        out_tile_vars = [v for v in tile_vars if v[0] not in {x for x, _ in r_tile}]
+    else:
+        val = _eval_expr_tile(expr, ctx, bufs)
+        val = jnp.broadcast_to(jnp.asarray(val), ctx.shape)
+        # reduce over reduce tile dims
+        r_pos = [ctx.pos[v] for v, _ in r_tile]
+        if r_pos:
+            val = REDUCE_JNP[blk.reduce_op](val, axis=tuple(r_pos))
+        out_tile_vars = [v for v in tile_vars if v[0] not in {x for x, _ in r_tile}]
+
+    # ---- write the spatial tile into the output buffer -------------------
+    w = blk.write
+    senv = ctx.scalar_env()
+    # compose write indices with bindings
+    w_exprs = [ix.substitute(bn.bindings) for ix in blk.write_indices]
+    offsets = [_eval_linexpr(ix, senv) for ix in w_exprs]
+
+    # contiguity: each write dim uses at most one *spatial tile* var, coef 1
+    out_pos = {v: i for i, (v, _) in enumerate(out_tile_vars)}
+    dim_var: List[Optional[str]] = []
+    contiguous = True
+    used = set()
+    for ix in w_exprs:
+        vs = [v for v in ix.vars() if v in out_pos]
+        if len(vs) == 0:
+            dim_var.append(None)
+        elif len(vs) == 1:
+            t = [t for t in ix.terms if t.var == vs[0]][0]
+            if t.coef == 1 and t.div == 1 and t.mod is None and vs[0] not in used:
+                dim_var.append(vs[0])
+                used.add(vs[0])
+            else:
+                contiguous = False
+                break
+        else:
+            contiguous = False
+            break
+    if contiguous and len(used) == len(out_tile_vars):
+        # reshape/transpose tile to buffer-dim order
+        perm = [out_pos[v] for v in dim_var if v is not None]
+        val_t = jnp.transpose(val, perm) if perm != sorted(perm) else val
+        # insert singleton dims for var-less write dims
+        full_shape = []
+        it = iter(range(len(perm)))
+        src_shape = list(val_t.shape)
+        k = 0
+        for dv in dim_var:
+            if dv is None:
+                full_shape.append(1)
+            else:
+                full_shape.append(src_shape[k])
+                k += 1
+        val_t = val_t.reshape(full_shape)
+        starts = [jnp.asarray(o, dtype=jnp.int32) for o in offsets]
+        buf = bufs[w.name]
+        # accumulate iff some reduce axes are ITERATED (not all in tile)
+        iter_reduce = _has_iterated_reduce(bn, tile_loops)
+        if blk.reduce_op and iter_reduce:
+            cur = lax.dynamic_slice(buf, starts, val_t.shape)
+            comb = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[
+                blk.reduce_op
+            ]
+            val_t = comb(cur, val_t.astype(buf.dtype))
+        bufs[w.name] = lax.dynamic_update_slice(buf, val_t.astype(buf.dtype), starts)
+    else:
+        # scatter path
+        ienv = dict(ctx.index_env())
+        # restrict index arrays to spatial tile dims only
+        sctx = _TileCtx(env, out_tile_vars)
+        sienv = sctx.index_env()
+        idxs = [
+            jnp.broadcast_to(jnp.asarray(_eval_linexpr(ix, sienv)), sctx.shape)
+            for ix in w_exprs
+        ]
+        buf = bufs[w.name]
+        val_b = jnp.broadcast_to(val, sctx.shape).astype(buf.dtype)
+        iter_reduce = _has_iterated_reduce(bn, tile_loops)
+        if blk.reduce_op and iter_reduce:
+            if blk.reduce_op == "add":
+                bufs[w.name] = buf.at[tuple(idxs)].add(val_b)
+            elif blk.reduce_op == "max":
+                bufs[w.name] = buf.at[tuple(idxs)].max(val_b)
+            else:
+                bufs[w.name] = buf.at[tuple(idxs)].min(val_b)
+        else:
+            bufs[w.name] = buf.at[tuple(idxs)].set(val_b)
+    return bufs
+
+
+def _has_iterated_reduce(bn: BlockNode, tile_loops: List[LoopNode]) -> bool:
+    """True if any reduce axis of the block is fed by an iterated loop."""
+    blk = bn.block
+    tile_vars = {ln.var for ln in tile_loops}
+    for ax in blk.reduce_axes:
+        for v in bn.bindings[ax.name].vars():
+            if v not in tile_vars:
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Tree emission
+# ---------------------------------------------------------------------------
+
+
+def build(sch: Schedule) -> LoweredSchedule:
+    """Lower the scheduled tree into a jit-able function."""
+    func = sch.func
+    # precompute tile suffix per block node
+    tile_of: Dict[int, List[LoopNode]] = {}
+
+    def collect(nodes: List[Node], path: List[LoopNode]):
+        for n in nodes:
+            if isinstance(n, LoopNode):
+                collect(n.body, path + [n])
+            else:
+                tile_of[id(n)] = _tile_suffix(path, n)
+
+    collect(sch.root, [])
+    tile_vars_all = {ln.var for t in tile_of.values() for ln in t}
+    iter_count = estimate_iteration_count(sch)
+    tile_elems = max(
+        (int(np.prod([ln.extent for ln in t])) for t in tile_of.values() if t),
+        default=1,
+    )
+
+    # written buffers (allocated), with init values for root reduce blocks
+    written: Dict[str, Buffer] = {}
+    init_val: Dict[str, float] = {}
+    attached_reduce: Dict[str, bool] = {}
+    for n in iter_nodes(sch.root):
+        if isinstance(n, BlockNode):
+            written[n.block.write.name] = n.block.write
+            if n.block.reduce_op:
+                init_val[n.block.write.name] = n.block.init
+            attached_reduce[n.block.write.name] = bool(
+                n.attached and n.block.reduce_op
+            )
+
+    input_names = [b.name for b in func.inputs]
+    output_names = [b.name for b in func.outputs]
+
+    def emit_seq(nodes: List[Node], env, bufs):
+        for n in nodes:
+            bufs = emit_one(n, env, bufs)
+        return bufs
+
+    def emit_one(n: Node, env, bufs):
+        if isinstance(n, BlockNode):
+            tl = tile_of[id(n)]
+            if n.attached and n.block.reduce_op:
+                bufs = _init_region(n, tl, env, bufs)
+            return _emit_block(n, tl, env, bufs)
+        # loop node
+        if n.var in tile_vars_all:
+            # tile dim: do not iterate; descend (single child = block chain)
+            return emit_seq(n.body, env, bufs)
+        if n.extent == 1:
+            env2 = dict(env)
+            env2[n.var] = 0
+            return emit_seq(n.body, env2, bufs)
+        # iterated loop -> fori_loop over the written-buffer dict
+        def body(i, carry):
+            env2 = dict(env)
+            env2[n.var] = i
+            return emit_seq(n.body, env2, carry)
+
+        return lax.fori_loop(0, n.extent, body, bufs)
+
+    def _init_region(bn: BlockNode, tile_loops, env, bufs):
+        """Initialize the write region of an attached reduce block.
+
+        The region per *this* attachment instance is recomputed fresh, so
+        overlapping recompute across outer iterations stays correct.
+        """
+        blk = bn.block
+        # own loop vars = vars in bindings that are not in env
+        own_vars: Dict[str, int] = {}
+        for ax in blk.axes:
+            for t in bn.bindings[ax.name].terms:
+                if t.var not in env:
+                    own_vars[t.var] = None
+        # find extents from the tree
+        extents = {
+            ln.var: ln.extent
+            for ln in iter_nodes(sch.root)
+            if isinstance(ln, LoopNode)
+        }
+        var_ext = {v: extents[v] for v in own_vars}
+        senv = dict(env)
+        for v in var_ext:
+            senv[v] = 0
+        starts, sizes = [], []
+        for ix in blk.write_indices:
+            e = ix.substitute(bn.bindings)
+            off = _eval_linexpr(e, senv)
+            span_terms = [t for t in e.terms if t.var in var_ext]
+            lo, hi = LinExpr(span_terms, 0).bounds(var_ext) if span_terms else (0, 0)
+            starts.append(jnp.asarray(off + lo, dtype=jnp.int32))
+            sizes.append(hi - lo + 1)
+        buf = bufs[blk.write.name]
+        tile = jnp.full(tuple(sizes), blk.init, dtype=buf.dtype)
+        bufs = dict(bufs)
+        bufs[blk.write.name] = lax.dynamic_update_slice(buf, tile, starts)
+        return bufs
+
+    def fn(inputs: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        bufs: Dict[str, jnp.ndarray] = {}
+        for b in func.inputs:
+            bufs[b.name] = jnp.asarray(inputs[b.name], dtype=b.dtype)
+        for name, b in written.items():
+            iv = init_val.get(name, 0.0)
+            bufs[name] = jnp.full(b.shape, iv, dtype=b.dtype)
+        bufs = emit_seq(sch.root, {}, bufs)
+        return {n: bufs[n] for n in output_names}
+
+    return LoweredSchedule(fn, func, iter_count, tile_elems)
+
+
+# ---------------------------------------------------------------------------
+# Oracle / naive-jnp lowering of the unscheduled PrimFunc
+# ---------------------------------------------------------------------------
+
+
+def build_oracle(func: PrimFunc) -> Callable[[Dict[str, Any]], Dict[str, Any]]:
+    """Whole-domain vectorized lowering (einsum for contractions).
+
+    Defines correctness for every schedule and serves as the "default jnp"
+    baseline in the Figure-8 style benchmarks.
+    """
+
+    def eval_block(blk: Block, bufs):
+        from ..core.schedule import _is_matmul_pattern
+
+        axes = blk.axes
+        tile_vars = [(a.name, a.extent) for a in axes]
+        ctx = _TileCtx({}, tile_vars)
+        r_tile = [(a.name, a.extent) for a in blk.reduce_axes]
+        if _is_matmul_pattern(blk):
+            val = _einsum_tile(blk, None, ctx, bufs, r_tile)
+        else:
+            val = _eval_expr_tile(blk.expr, ctx, bufs)
+            val = jnp.broadcast_to(jnp.asarray(val), ctx.shape)
+            r_pos = [i for i, a in enumerate(axes) if a.kind == REDUCE]
+            if r_pos:
+                val = REDUCE_JNP[blk.reduce_op](val, axis=tuple(r_pos))
+        # scatter into output
+        s_axes = blk.spatial_axes
+        sctx = _TileCtx({}, [(a.name, a.extent) for a in s_axes])
+        sienv = sctx.index_env()
+        # fast path: identity writes
+        ident = all(
+            ix.single_var == a.name
+            for ix, a in zip(blk.write_indices, s_axes)
+        ) and len(blk.write_indices) == len(s_axes)
+        if ident and tuple(blk.write.shape) == sctx.shape:
+            return val.astype(blk.write.dtype)
+        out = jnp.full(blk.write.shape, blk.init, dtype=blk.write.dtype)
+        idxs = [
+            jnp.broadcast_to(jnp.asarray(_eval_linexpr(ix, sienv)), sctx.shape)
+            for ix in blk.write_indices
+        ]
+        return out.at[tuple(idxs)].set(jnp.broadcast_to(val, sctx.shape).astype(blk.write.dtype))
+
+    def fn(inputs: Dict[str, Any]) -> Dict[str, Any]:
+        bufs = {b.name: jnp.asarray(inputs[b.name], dtype=b.dtype) for b in func.inputs}
+        for blk in func.blocks:
+            bufs[blk.write.name] = eval_block(blk, bufs)
+        return {b.name: bufs[b.name] for b in func.outputs}
+
+    return fn

@@ -1,0 +1,110 @@
+"""Lower a Use-MXU-scheduled matmul trace onto the Pallas kernel.
+
+The jnp backend measures schedules on CPU; *this* backend realizes the same
+tuned schedule on TPU: the (S2·S3) spatial tile extents and the R1 reduce
+tile of the tensorized block become the Pallas ``BlockSpec`` shapes
+(bm, bn, bk) of :mod:`repro.kernels.matmul`.  Inlined/attached elementwise
+consumers become the kernel's fused epilogue.  This is the concrete
+instantiation of "MetaSchedule constructs the space, the backend carries
+the decisions to hardware" (paper Fig 1 + Appendix A.6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.schedule import BlockNode, LoopNode, Schedule, iter_nodes
+from ..core.tir import REDUCE, SPATIAL
+from ..core.trace import BlockRV
+
+
+def find_tensorized_block(sch: Schedule) -> Optional[BlockNode]:
+    for n in iter_nodes(sch.root):
+        if isinstance(n, BlockNode) and n.annotations.get("tensorize") == "mxu":
+            return n
+    # fall back: first reduce block
+    for n in iter_nodes(sch.root):
+        if isinstance(n, BlockNode) and n.block.reduce_axes:
+            return n
+    return None
+
+
+def extract_matmul_blocks(sch: Schedule) -> Optional[Tuple[int, int, int]]:
+    """(bm, bn, bk) from the tensorized block's tile structure."""
+    from .jnp_backend import _tile_suffix
+
+    bn_node = find_tensorized_block(sch)
+    if bn_node is None:
+        return None
+    blk = bn_node.block
+    if len(blk.spatial_axes) < 2 or len(blk.reduce_axes) < 1:
+        return None
+    _, path = sch._find_block(blk.name)
+    loops = [n for n in path if isinstance(n, LoopNode)]
+    tile = _tile_suffix(loops, bn_node)
+    if not tile:
+        return None
+    # per-axis tile extent = product of tile loops feeding that axis
+    per_axis: Dict[str, int] = {a.name: 1 for a in blk.axes}
+    for ln in tile:
+        for ax in blk.axes:
+            if ln.var in bn_node.bindings[ax.name].vars():
+                per_axis[ax.name] *= ln.extent
+    s_axes = blk.spatial_axes
+    r_axes = blk.reduce_axes
+    # m = second-to-last spatial, n = last spatial, k = first reduce
+    bm = per_axis[s_axes[-2].name]
+    bn = per_axis[s_axes[-1].name]
+    bk = per_axis[r_axes[0].name]
+    return (max(bm, 1), max(bn, 1), max(bk, 1))
+
+
+def lower_dense_to_pallas(
+    sch: Schedule,
+    *,
+    interpret: bool = True,
+):
+    """Build a callable running the tuned dense workload via the Pallas
+    matmul kernel with extracted block sizes.  Returns (fn, blocks)."""
+    from ..kernels import matmul as mm
+
+    blocks = extract_matmul_blocks(sch)
+    if blocks is None:
+        raise ValueError("schedule has no tensorizable matmul block")
+    func = sch.func
+    # identify epilogue from the ORIGINAL workload name (dense_<epilogue>)
+    epilogue = "none"
+    if func.name.startswith("dense_"):
+        epilogue = func.name[len("dense_"):]
+
+    def fn(inputs: Dict):
+        x, w = inputs["X"], inputs["W"]
+        bias = inputs.get("bias")
+        M, K = x.shape
+        N = w.shape[1]
+        bm, bn, bk = blocks
+        # snap to divisors (Pallas needs exact tiling)
+        bm = _best_divisor(M, bm)
+        bn = _best_divisor(N, bn)
+        bk = _best_divisor(K, bk)
+        out = mm.matmul(
+            x, w, bias, epilogue=epilogue, block_sizes=(bm, bn, bk),
+            interpret=interpret,
+        )
+        return {func.outputs[0].name: out}
+
+    return fn, blocks
+
+
+def _best_divisor(n: int, target: int) -> int:
+    best, bd = 1, abs(target - 1)
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            for c in (d, n // d):
+                if abs(c - target) < bd:
+                    best, bd = c, abs(c - target)
+        d += 1
+    return best

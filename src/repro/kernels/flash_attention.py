@@ -1,0 +1,152 @@
+"""Blocked (flash) attention Pallas kernel.
+
+Online-softmax attention with BlockSpec-tiled Q/K/V staging, supporting:
+  * causal masking,
+  * sliding-window (local) masking — gemma-2 local layers / hymba,
+  * gemma-2 logit soft-capping,
+  * GQA via BlockSpec index maps (kv head = q head // group) — no
+    materialized K/V repetition.
+
+The kv grid dimension is sequential; running (m, l, acc) statistics live in
+VMEM scratch.  Block sizes (bq, bkv) are MetaSchedule-tunable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    nkv: int,
+    bq: int,
+    bkv: int,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), dtype=bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, KVH, S, D); returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    assert S % bq == 0 and S % bkv == 0
+    nq, nkv = S // bq, S // bkv
+    kernel = functools.partial(
+        _attn_kernel,
+        nkv=nkv,
+        bq=bq,
+        bkv=bkv,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+    )
+    grid = (B * H, 1, nq, nkv)  # (batch*head, unit, q blocks, kv blocks)
+
+    def qmap(bh, _, qi, ki):
+        return (bh, qi, 0)
+
+    def kvmap(bh, _, qi, ki):
+        # GQA: q head bh%H maps to kv head (bh%H)//G
+        b = bh // H
+        h = bh % H
+        return (b * KVH + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), qmap),
+            pl.BlockSpec((1, bkv, D), kvmap),
+            pl.BlockSpec((1, bkv, D), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(
+        q.reshape(B * H, S, D),
+        k.reshape(B * KVH, S, D),
+        v.reshape(B * KVH, S, D),
+    )
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,110 @@
+"""Public jit'd kernel wrappers with MetaSchedule-tuned parameters.
+
+Models call these; each op dispatches between the pure-jnp reference path
+(``backend="jnp"`` — used for the multi-device dry-run, where Mosaic cannot
+lower on CPU) and the Pallas kernel (``backend="pallas"`` — interpret-mode
+on this container, native on TPU).  Tuned tile sizes are looked up in the
+tuning database by workload key (DESIGN.md §4, paper Appendix A.6).
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import matmul as _mm
+from . import ssd as _ssd
+from . import ref
+
+_DB = None
+_DB_PATH = os.environ.get("REPRO_TUNING_DB", "")
+
+
+def set_database(db) -> None:
+    global _DB
+    _DB = db
+
+
+def _db():
+    global _DB
+    if _DB is None and _DB_PATH:
+        from ..search.database import Database
+
+        _DB = Database(_DB_PATH)
+    return _DB
+
+
+def tuned_matmul_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """Look up tuned (bm, bn, bk) for a matmul shape; MXU default otherwise."""
+    db = _db()
+    if db is not None:
+        from ..search.database import workload_key
+
+        rec = db.best(workload_key("dense", k=k, m=m, n=n))
+        if rec is not None and "blocks" in rec.meta:
+            return tuple(rec.meta["blocks"])
+    return _mm.DEFAULT_BLOCKS
+
+
+def matmul(
+    x,
+    w,
+    bias=None,
+    *,
+    epilogue: str = "none",
+    softcap: float = 30.0,
+    backend: str = "jnp",
+    block_sizes: Optional[Tuple[int, int, int]] = None,
+    interpret: bool = True,
+):
+    """2-D matmul with fused epilogue.  x: (M, K), w: (K, N)."""
+    if backend == "jnp":
+        return ref.matmul(x, w, bias, epilogue, softcap)
+    bs = block_sizes or tuned_matmul_blocks(x.shape[0], w.shape[1], x.shape[1])
+    return _mm.matmul(
+        x, w, bias, epilogue=epilogue, softcap=softcap,
+        block_sizes=bs, interpret=interpret,
+    )
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    backend: str = "jnp",
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+):
+    if backend == "jnp":
+        return ref.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+def ssd(
+    x,
+    log_a,
+    B,
+    C,
+    *,
+    chunk: int = 64,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    if backend == "jnp":
+        return ref.ssd_chunked(x, log_a, B, C, chunk=min(chunk, x.shape[1]))
+    return _ssd.ssd(x, log_a, B, C, chunk=chunk, interpret=interpret)

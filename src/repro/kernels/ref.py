@@ -1,0 +1,150 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_epilogue(y, epilogue: str, bias=None, softcap: float = 30.0):
+    if bias is not None:
+        y = y + bias
+    if epilogue in ("none", "bias", None):
+        return y
+    if epilogue.endswith("relu"):
+        return jnp.maximum(y, 0.0)
+    if epilogue.endswith("gelu"):
+        return jax.nn.gelu(y, approximate=False)
+    if epilogue.endswith("silu"):
+        return jax.nn.silu(y)
+    if epilogue == "softcap":
+        return softcap * jnp.tanh(y / softcap)
+    raise ValueError(epilogue)
+
+
+def matmul(x, w, bias=None, epilogue: str = "none", softcap: float = 30.0):
+    """y = epilogue(x @ w + bias), fp32 accumulation."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = apply_epilogue(y, epilogue, bias, softcap)
+    return y.astype(x.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+):
+    """Reference attention.
+
+    q: (B, H, S, D); k/v: (B, KVH, S, D) with H % KVH == 0 (GQA).
+    ``window``: sliding-window size (local attention); None = global.
+    ``softcap``: gemma-2 style logit cap.
+    """
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kk, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    si = jnp.arange(S)[:, None]
+    ti = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask = mask & (ti <= si)
+    if window is not None:
+        mask = mask & (si - ti < window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p.astype(vv.dtype), vv)
+    return out.astype(q.dtype)
+
+
+def ssd_scan(x, log_a, B, C):
+    """Reference Mamba-2 SSD by naive recurrence.
+
+    x: (batch, S, H, P) inputs, log_a: (batch, S, H) log decay,
+    B: (batch, S, N), C: (batch, S, N).  Returns y: (batch, S, H, P).
+      h_t = exp(log_a_t) * h_{t-1} + B_t ⊗ x_t       (h: (H, N, P))
+      y_t = C_t · h_t
+    """
+    batch, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, lat, Bt, Ct = inp  # (H,P), (H,), (N,), (N,)
+        h = jnp.exp(lat)[:, None, None] * h + Bt[None, :, None] * xt[:, None, :]
+        y = jnp.einsum("n,hnp->hp", Ct, h)
+        return h, y
+
+    def per_batch(xb, lab, Bb, Cb):
+        h0 = jnp.zeros((H, N, P), dtype=jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32), lab, Bb, Cb))
+        return ys
+
+    y = jax.vmap(per_batch)(x, log_a, B.astype(jnp.float32), C.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, log_a, B, C, chunk: int = 16, return_state: bool = False):
+    """Chunked (state-space duality) reference — the algorithm the Pallas
+    kernel implements; mathematically equal to :func:`ssd_scan`.
+    ``return_state=True`` also returns the final state (B, H, N, P)
+    (needed when prefill hands off to the decode recurrence)."""
+    batch, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(batch, nc, chunk, H, P).astype(jnp.float32)
+    lac = log_a.reshape(batch, nc, chunk, H)
+    Bc = B.reshape(batch, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(batch, nc, chunk, N).astype(jnp.float32)
+    cum = jnp.cumsum(lac, axis=2)  # (b, nc, L, H)
+
+    # intra-chunk (quadratic with decay mask)
+    i = jnp.arange(chunk)[:, None]
+    j = jnp.arange(chunk)[None, :]
+    tri = i >= j
+    # decay(i,j) = exp(cum_i - cum_j + la_j)  for i > j; for i == j: la_i? no:
+    # h contribution of step j to step i: prod_{t=j+1..i} a_t = exp(cum_i - cum_j)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (b,nc,L,L,H)
+    dec = jnp.where(tri[None, None, :, :, None], dec, 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,L,L)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, dec, xc)
+
+    # chunk states: h_c = sum_j exp(cum_L - cum_j) B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,L,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xc)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,H)
+
+    def scan_fn(h, inp):
+        st, cd = inp  # (b,H,N,P), (b,H)
+        h_new = cd[:, :, None, None] * h + st
+        return h_new, h
+
+    h0 = jnp.zeros((batch, H, N, P), dtype=jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (b,nc,H,N,P) state BEFORE chunk
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), h_prev
+    )
+    y = (y_intra + y_inter).reshape(batch, S, H, P)
+    if return_state:
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)

@@ -1,0 +1,269 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory / cost / collective statistics.
+
+This proves the distribution config is coherent without real hardware:
+``.lower().compile()`` must succeed for the 16×16 (single-pod, 256 chips)
+mesh AND the 2×16×16 (512-chip multi-pod) mesh for every cell.  Inputs and
+parameters are ShapeDtypeStructs — nothing is allocated.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py (EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ARCHS, SHAPES, ShapeConfig, cell_supported, get_config
+from ..distributed import sharding as shd
+from ..models import registry as R
+from ..models.registry import build_model
+from ..training.optimizer import OptConfig, adamw_init
+from ..training.train_loop import make_train_step
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (optimized) HLO."""
+    out = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    # lines like:  %x = bf16[16,1024]{1,0} all-gather(...), replica_groups=...
+    pat = re.compile(
+        r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\s(" + "|".join(COLLECTIVES) + r")\("
+    )
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = DTYPE_BYTES.get(dt, 4)
+        if dims:
+            for d in dims.split(","):
+                nbytes *= int(d)
+        out[op] += float(nbytes)
+        out["count"] += 1
+    return out
+
+
+def _spec_tree_to_shardings(mesh, tree):
+    return tree
+
+
+def build_cell(
+    arch: str, shape_name: str, mesh, fsdp: bool = True
+) -> Tuple[Any, Tuple, Dict]:
+    """Returns (jitted_fn, abstract_args, meta) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+
+    if shape.kind == "train":
+        p_sh = shd.param_shardings(mesh, pspecs, fsdp=True)
+        opt_specs = jax.eval_shape(adamw_init, pspecs)
+        o_sh = shd.opt_state_shardings(mesh, pspecs)
+        batch_specs = R.train_batch_specs(cfg, shape)
+        b_sh = shd.batch_shardings(mesh, batch_specs)
+        step = make_train_step(model, OptConfig())
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, shd.replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
+        args = (pspecs, opt_specs, batch_specs)
+    elif shape.kind == "prefill":
+        p_sh = shd.param_shardings(mesh, pspecs, fsdp=False)
+        cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_sh = shd.cache_shardings(mesh, cache_specs)
+        ins = R.prefill_input_specs(cfg, shape)
+        i_sh = shd.batch_shardings(mesh, ins)
+
+        def prefill_step(params, cache, inputs):
+            return model.prefill(params, cache, **inputs)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(p_sh, c_sh, i_sh),
+            out_shardings=(shd.replicated(mesh), c_sh),
+            donate_argnums=(1,),
+        )
+        args = (pspecs, cache_specs, ins)
+    else:  # decode
+        p_sh = shd.param_shardings(mesh, pspecs, fsdp=False)
+        cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_sh = shd.cache_shardings(mesh, cache_specs)
+        ins = R.decode_input_specs(cfg, shape)
+        i_sh = shd.batch_shardings(mesh, ins)
+
+        def serve_step(params, cache, inputs):
+            return model.decode_step(params, cache, inputs["tokens"])
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, c_sh, i_sh),
+            out_shardings=(shd.replicated(mesh), c_sh),
+            donate_argnums=(1,),
+        )
+        args = (pspecs, cache_specs, ins)
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "params": cfg.params_count(),
+        "active_params": cfg.active_params_count(),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    return fn, args, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with shd.use_mesh(mesh):
+            fn, args, meta = build_cell(arch, shape_name, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        # trip-count-corrected costs (XLA cost_analysis counts while bodies
+        # once — see hlo_analysis.py; verified scan(10) reports 1x)
+        from .hlo_analysis import analyze_hlo
+
+        corrected = analyze_hlo(hlo)
+        n_dev = int(np.prod(mesh.devices.shape))
+        rec.update(
+            status="ok",
+            meta=meta,
+            compile_s=round(time.time() - t0, 2),
+            n_devices=n_dev,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            cost={
+                "flops": cost.get("flops") if cost else None,
+                "bytes_accessed": cost.get("bytes accessed") if cost else None,
+            },
+            collectives=coll,
+            corrected={
+                "dot_flops": corrected["dot_flops"],
+                "collectives": corrected["collectives"],
+                "trip_counts": corrected["trip_counts"],
+            },
+        )
+    except Exception as e:
+        rec.update(
+            status="error",
+            error=f"{type(e).__name__}: {e}",
+            trace=traceback.format_exc()[-2000:],
+            compile_s=round(time.time() - t0, 2),
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for arch in archs:
+        for sh in shapes:
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    n_ok = n_skip = n_err = 0
+    for arch, sh, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        out_path = os.path.join(args.out, f"{arch}__{sh}__{mesh_name}.json")
+        if os.path.exists(out_path):
+            rec = json.load(open(out_path))
+            if rec.get("status") == "ok" or rec.get("status") == "skipped":
+                print(f"[cached] {arch} {sh} {mesh_name}: {rec['status']}")
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                continue
+        rec = run_cell(arch, sh, mp)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        tag = rec["status"]
+        if tag == "ok":
+            n_ok += 1
+            mem = rec["memory"]["peak_bytes"] or 0
+            print(
+                f"[ok] {arch} {sh} {mesh_name}: compile {rec['compile_s']}s "
+                f"peak/device {mem/2**30:.2f} GiB "
+                f"flops {rec['cost']['flops'] or 0:.3g} "
+                f"coll {rec['collectives']['count']}"
+            )
+        elif tag == "skipped":
+            n_skip += 1
+            print(f"[skip] {arch} {sh} {mesh_name}: {rec['reason'][:60]}")
+        else:
+            n_err += 1
+            print(f"[ERR] {arch} {sh} {mesh_name}: {rec['error'][:200]}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,172 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so models
+that scan over layers under-report FLOPs by ~n_layers× (verified on this
+jax build: scan(10) over a matmul reports 1 matmul of flops).  The
+optimized HLO does carry ``known_trip_count`` on while ops, so this module
+parses the module structure, propagates call-graph multipliers
+(entry=1; while body ×= trip count; fusion/call inherit), and recounts:
+
+* dot FLOPs  (2 · prod(out_dims) · prod(contracting_dims)),
+* collective bytes by type (operand sizes × multiplier),
+
+which feed the roofline terms in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "c64": 8,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_elems(dt: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, DTYPE_BYTES.get(dt, 4)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.shape_of: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+        self._parse(text)
+        self.mult = self._multipliers()
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        self.entry: Optional[str] = None
+        # params may be tuple-typed (contain parens) -> greedy match
+        header = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+        for line in text.splitlines():
+            s = line.strip()
+            if cur is None:
+                m = header.match(s)
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if s == "}":
+                cur = None
+                continue
+            self.computations[cur].append(s)
+            # record produced shape: %name = dtype[dims]{...} op(...)
+            m = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]", s)
+            if m:
+                name, dt, dims = m.groups()
+                shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+                self.shape_of[name] = (dt, shape)
+
+    def _multipliers(self) -> Dict[str, float]:
+        """Call-graph multiplier per computation (trip counts compound)."""
+        mult = {c: 0.0 for c in self.computations}
+        entry = self.entry or list(self.computations)[-1]
+        mult[entry] = 1.0
+        # iterate to fixpoint (call graph is a DAG; few passes suffice)
+        for _ in range(16):
+            changed = False
+            for comp, lines in self.computations.items():
+                m = mult.get(comp, 0.0)
+                if m == 0.0:
+                    continue
+                for s in lines:
+                    trip = 1.0
+                    tc = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', s)
+                    is_while = " while(" in s
+                    if is_while and tc:
+                        trip = float(tc.group(1))
+                    for key in ("body=", "condition=", "to_apply=", "calls="):
+                        for ref in re.findall(key + r"{?%?([\w\.\-]+)", s):
+                            factor = trip if key == "body=" else 1.0
+                            new = m * factor
+                            if ref in mult and new > mult[ref]:
+                                mult[ref] = new
+                                changed = True
+            if not changed:
+                break
+        return mult
+
+    # -- costs ---------------------------------------------------------------
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp, lines in self.computations.items():
+            m = self.mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for s in lines:
+                dm = re.match(
+                    r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*"
+                    r"\bdot\(%([\w\.\-]+),",
+                    s,
+                )
+                if not dm:
+                    continue
+                dt, out_dims, lhs = dm.groups()
+                out_elems, _ = _shape_elems(dt, out_dims)
+                cm = re.search(r"lhs_contracting_dims={([\d,]*)}", s)
+                contract = 1
+                if cm and lhs in self.shape_of:
+                    lshape = self.shape_of[lhs][1]
+                    for d in (cm.group(1).split(",") if cm.group(1) else []):
+                        contract *= lshape[int(d)]
+                total += m * 2.0 * out_elems * contract
+        return total
+
+    def collective_bytes(self) -> Dict[str, float]:
+        out: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+        out["count"] = 0.0
+        pat = re.compile(
+            r"=\s*\(?([a-z0-9]+)\[([\d,]*)\][^=]*?\s("
+            + "|".join(COLLECTIVES)
+            + r")\("
+        )
+        for comp, lines in self.computations.items():
+            m = self.mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for s in lines:
+                mm = pat.search(s)
+                if not mm:
+                    continue
+                dt, dims, op = mm.groups()
+                elems, bpe = _shape_elems(dt, dims)
+                out[op] += m * elems * bpe
+                out["count"] += m
+        return out
+
+    def while_trip_counts(self) -> List[int]:
+        out = []
+        for lines in self.computations.values():
+            for s in lines:
+                tc = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', s)
+                if " while(" in s and tc:
+                    out.append(int(tc.group(1)))
+        return out
+
+
+def analyze_hlo(text: str) -> Dict:
+    mod = HloModule(text)
+    return {
+        "dot_flops": mod.dot_flops(),
+        "collectives": mod.collective_bytes(),
+        "trip_counts": mod.while_trip_counts(),
+    }

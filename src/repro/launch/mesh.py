@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (device count locks on first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic rescale / tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist on this host (smoke tests: 1 CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,124 @@
+"""Model facade: build, init, step functions, and dry-run input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given (arch × shape) cell — weak-type-correct, shardable,
+no device allocation — exactly what ``launch/dryrun.py`` lowers against.
+Modality frontends are stubs per the assignment: whisper provides
+precomputed frame embeddings, qwen2-vl precomputed patch/text embeddings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import transformer as T
+
+PyTree = Any
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, rng) -> PyTree:
+        return T.init_params(self.cfg, rng)
+
+    def param_specs(self) -> PyTree:
+        return T.param_specs(self.cfg)
+
+    # -- steps ----------------------------------------------------------------
+    def loss(self, params: PyTree, batch: Dict) -> jnp.ndarray:
+        return T.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params: PyTree, **inputs) -> jnp.ndarray:
+        return T.forward(self.cfg, params, **inputs)
+
+    def init_cache(self, batch: int, max_seq: int) -> PyTree:
+        return T.init_cache(self.cfg, batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int) -> PyTree:
+        return jax.eval_shape(lambda: T.init_cache(self.cfg, batch, max_seq))
+
+    def prefill(self, params, cache, **inputs):
+        return T.prefill(self.cfg, params, cache, **inputs)
+
+    def decode_step(self, params, cache, tokens):
+        return T.decode_step(self.cfg, params, cache, tokens)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embedding_inputs:
+        batch = {
+            "embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    else:
+        batch = {"tokens": _sds((B, S + 1), jnp.int32)}
+    if cfg.enc_layers:
+        batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    ins: Dict[str, Any] = {}
+    if cfg.embedding_inputs:
+        ins["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        ins["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.enc_layers:
+        ins["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return ins
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B = shape.global_batch
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def make_train_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> Dict:
+    """Concrete synthetic batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embedding_inputs:
+        batch = {
+            "embeds": jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model)), dtype=jnp.bfloat16
+            ),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, S)), dtype=jnp.int32
+            ),
+        }
+    else:
+        batch = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, S + 1)), dtype=jnp.int32
+            )
+        }
+    if cfg.enc_layers:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_frames, cfg.d_model)),
+            dtype=jnp.bfloat16,
+        )
+    return batch

@@ -1,0 +1,497 @@
+"""Unified decoder LM covering all assigned families.
+
+One scanned-layer decoder implementation parameterized by
+:class:`~repro.configs.base.ModelConfig`:
+
+* dense GQA transformers (stablelm / qwen1.5-110b / smollm),
+* gemma-2 (local/global alternation, softcaps, sandwich norms),
+* MoE (olmoe; arctic with dense-residual MLP),
+* Mamba-2 SSD (attention-free),
+* Hymba (parallel attention + SSD heads, sliding window),
+* Qwen2-VL backbone (M-RoPE, embedding inputs),
+* Whisper (encoder stack + cross-attention decoder).
+
+Layers are stacked along a leading L axis and executed with
+``jax.lax.scan`` so the lowered HLO is O(1) in depth (MaxText-style) —
+this keeps 512-device dry-run compiles tractable and is also what you
+deploy.  Per-layer heterogeneity (gemma2/hymba window pattern) rides
+through the scan as a traced (L,) metadata array.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..distributed import sharding as shd
+from . import layers as L
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: ModelConfig, rng) -> Dict:
+    ks = jax.random.split(rng, 8)
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model, "ln")}
+    if not cfg.attn_free:
+        p["attn"] = L.attention_init(ks[0], cfg, "attn")
+        if cfg.post_norms:
+            p["post_ln1"] = L.rmsnorm_init(cfg.d_model, "ln")
+    if cfg.ssm_state:
+        p["ssd"] = L.ssd_init(ks[1], cfg, "ssd")
+    if cfg.d_ff:
+        p["ln2"] = L.rmsnorm_init(cfg.d_model, "ln")
+        if cfg.moe_experts:
+            p["moe"] = L.moe_init(ks[2], cfg, "moe")
+            if cfg.moe_dense_residual:
+                p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, "mlp")
+        else:
+            p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, "mlp")
+        if cfg.post_norms:
+            p["post_ln2"] = L.rmsnorm_init(cfg.d_model, "ln")
+    if cfg.enc_layers:  # decoder cross-attention (whisper)
+        p["ln_x"] = L.rmsnorm_init(cfg.d_model, "ln")
+        p["xattn"] = L.attention_init(ks[4], cfg, "attn")
+    return p
+
+
+def _enc_layer_init(cfg: ModelConfig, rng) -> Dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, "ln"),
+        "attn": L.attention_init(ks[0], cfg, "attn"),
+        "ln2": L.rmsnorm_init(cfg.d_model, "ln"),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "mlp"),
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> PyTree:
+    k_emb, k_layers, k_enc, k_f = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys),
+        "final_ln": L.rmsnorm_init(cfg.d_model, "ln"),
+    }
+    if cfg.enc_layers:
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys)
+        params["enc_final_ln"] = L.rmsnorm_init(cfg.d_model, "ln")
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    """Abstract parameter shapes (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer metadata (window pattern)
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """(L,) int32; 0 = global attention, >0 = sliding window size.
+
+    Static (numpy) metadata: init_cache sizes buffers from it, so it must
+    stay concrete under jax.eval_shape; scan converts it on use.
+    """
+    Ln = cfg.n_layers
+    if cfg.alt_local_global and cfg.local_window:
+        w = [(cfg.local_window if i % 2 == 0 else 0) for i in range(Ln)]
+    elif cfg.hybrid and cfg.local_window:
+        # hymba: global attention on first / middle / last layers
+        glb = {0, Ln // 2, Ln - 1}
+        w = [(0 if i in glb else cfg.local_window) for i in range(Ln)]
+    elif cfg.local_window:
+        w = [cfg.local_window] * Ln
+    else:
+        w = [0] * Ln
+    return np.asarray(w, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset: int = 0):
+    pos = offset + jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope:
+        return jnp.stack([pos, pos, pos], axis=-1)  # text: t=h=w
+    return pos
+
+
+def _rope_q(cfg, q, pos):
+    # q: (B, H, S, D); pos: (B, S) or (B, S, 3)
+    if cfg.mrope:
+        return L.apply_mrope(q, pos[:, None], theta=cfg.rope_theta)
+    return L.apply_rope(q, pos[:, None], theta=cfg.rope_theta)
+
+
+def _attn_full(cfg, p, x, pos, window, chunk=1024):
+    B, S, _ = x.shape
+    q, k, v = L.qkv_proj(p, x, cfg)
+    hd_dims = (cfg.n_heads, cfg.n_kv_heads)
+    q = shd.shard(q, "act_heads", hd_dims)
+    k = shd.shard(k, "act_kv_heads", hd_dims)
+    v = shd.shard(v, "act_kv_heads", hd_dims)
+    q = _rope_q(cfg, q, pos)
+    k = _rope_q(cfg, k, pos)
+    out = L.chunked_attention(
+        q, k, v,
+        causal=True,
+        window=window,
+        softcap=cfg.attn_softcap,
+        chunk=min(chunk, S),
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+
+
+def _layer_fwd(
+    cfg: ModelConfig, p: Dict, x, pos, window, collect_cache=False, cross_fn=None
+):
+    """One decoder layer: mixer (attn and/or SSD) → [cross-attn] → FFN."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    h = shd.shard(h, "residual")
+    mix = jnp.zeros_like(x)
+    kv = None
+    ssm_state = None
+    xkv = None
+    if not cfg.attn_free:
+        a, kv = _attn_full(cfg, p["attn"], h, pos, window)
+        if cfg.post_norms:
+            a = L.rmsnorm(a, p["post_ln1"], cfg.norm_eps)
+        mix = mix + a
+    if cfg.ssm_state:
+        if collect_cache:
+            s, ssm_state = L.ssd_mixer_with_state(p["ssd"], h, cfg)
+        else:
+            s = L.ssd_mixer(p["ssd"], h, cfg)
+        mix = mix + s
+    x = x + mix
+    if cross_fn is not None:  # whisper: cross-attn between self-attn and FFN
+        hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        xo, xkv = cross_fn(p["xattn"], hx)
+        x = x + xo
+    if cfg.d_ff:
+        h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        f = jnp.zeros_like(x)
+        if cfg.moe_experts:
+            f = f + L.moe(p["moe"], h2, cfg.moe_top_k, cfg.moe_capacity_factor, act=cfg.act)
+            if cfg.moe_dense_residual:
+                f = f + L.mlp(p["mlp"], h2, cfg.act)
+        else:
+            f = L.mlp(p["mlp"], h2, cfg.act)
+        if cfg.post_norms:
+            f = L.rmsnorm(f, p["post_ln2"], cfg.norm_eps)
+        x = x + f
+    return shd.shard(x, "residual"), kv, ssm_state, xkv
+
+
+def _encoder(cfg: ModelConfig, params, frames):
+    """Whisper encoder over precomputed frame embeddings (B, F, D)."""
+    x = frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    B, F, _ = x.shape
+    pos = _positions(cfg, B, F)
+
+    def step(carry, p):
+        h = L.rmsnorm(carry, p["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(p["attn"], h, cfg)
+        q = _rope_q(cfg, q, pos)
+        k = _rope_q(cfg, k, pos)
+        o = L.chunked_attention(q, k, v, causal=False, chunk=min(1024, F))
+        o = o.transpose(0, 2, 1, 3).reshape(B, F, cfg.n_heads * cfg.head_dim)
+        carry = carry + jnp.einsum("bsh,hd->bsd", o, p["attn"]["wo"])
+        h2 = L.rmsnorm(carry, p["ln2"], cfg.norm_eps)
+        carry = carry + L.mlp(p["mlp"], h2, cfg.act)
+        return carry, None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _cross_attn(cfg, p, x, enc_out):
+    B, S, _ = x.shape
+    F = enc_out.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        B, S, cfg.n_heads, cfg.head_dim
+    ).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bfd,dh->bfh", enc_out, p["wk"]).reshape(
+        B, F, cfg.n_kv_heads, cfg.head_dim
+    ).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bfd,dh->bfh", enc_out, p["wv"]).reshape(
+        B, F, cfg.n_kv_heads, cfg.head_dim
+    ).transpose(0, 2, 1, 3)
+    o = L.chunked_attention(q, k, v, causal=False, chunk=min(1024, F))
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: PyTree,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    frames: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, V)."""
+    if embeds is not None:
+        x = embeds.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    else:
+        x = L.embed(tokens, params["embed"]) * math.sqrt(cfg.d_model)
+    x = shd.shard(x, "residual")
+    B, S, _ = x.shape
+    pos = _positions(cfg, B, S)
+    windows = layer_windows(cfg)
+    enc_out = None
+    if cfg.enc_layers:
+        assert frames is not None, "whisper needs encoder frames"
+        enc_out = _encoder(cfg, params, frames)
+
+    cross = (
+        (lambda pa, hx: _cross_attn(cfg, pa, hx, enc_out))
+        if cfg.enc_layers
+        else None
+    )
+
+    def step(carry, inp):
+        p, w = inp
+        x = carry
+        x, _, _, _ = _layer_fwd(cfg, p, x, pos, w, cross_fn=cross)
+        return x, None
+
+    if remat:
+        # save only layer boundaries; recompute internals in backward
+        step = jax.checkpoint(
+            step, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(step, x, (params["layers"], windows))
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shd.shard(logits, "logits")
+
+
+def loss_fn(cfg: ModelConfig, params: PyTree, batch: Dict) -> jnp.ndarray:
+    """Next-token cross entropy.  batch: {"tokens": (B, S+1)} or
+    {"embeds": (B, S, D), "labels": (B, S)} (+ "frames" for whisper)."""
+    if "tokens" in batch:
+        inputs = batch["tokens"][:, :-1]
+        labels = batch["tokens"][:, 1:]
+        logits = forward(
+            cfg, params, tokens=inputs, frames=batch.get("frames"), remat=True
+        )
+    else:
+        labels = batch["labels"]
+        logits = forward(
+            cfg, params, embeds=batch["embeds"], frames=batch.get("frames"),
+            remat=True,
+        )
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    """Decode cache.  Sliding-window layers only allocate the window (ring
+    buffer) — this is what makes hymba's 512k decode bounded."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), dtype=jnp.int32)}
+    Ln = cfg.n_layers
+    if not cfg.attn_free:
+        windows = layer_windows(cfg)
+        # per-layer cache length: window size if local else full context
+        kv_len = int(max(np.where(windows > 0, np.minimum(windows, max_seq), max_seq)))
+        cache["k"] = jnp.zeros(
+            (Ln, batch, cfg.n_kv_heads, kv_len, cfg.head_dim), dtype=dt
+        )
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.ssm_state:
+        cache["state"] = jnp.zeros(
+            (Ln, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            dtype=jnp.float32,
+        )
+    if cfg.enc_layers:
+        cache["xk"] = jnp.zeros(
+            (Ln, batch, cfg.n_kv_heads, cfg.enc_frames, cfg.head_dim), dtype=dt
+        )
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def cache_max_len(cfg: ModelConfig, max_seq: int) -> int:
+    windows = np.asarray(layer_windows(cfg))
+    if cfg.attn_free:
+        return 0
+    return int(max(np.where(windows > 0, np.minimum(windows, max_seq), max_seq)))
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: PyTree,
+    cache: PyTree,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    frames: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Process the prompt, fill the cache, return last-position logits."""
+    if embeds is not None:
+        x = embeds.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    else:
+        x = L.embed(tokens, params["embed"]) * math.sqrt(cfg.d_model)
+    B, S, _ = x.shape
+    pos = _positions(cfg, B, S)
+    windows = layer_windows(cfg)
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encoder(cfg, params, frames)
+
+    kv_len = cache["k"].shape[3] if "k" in cache else 0
+    if kv_len and kv_len < S:
+        # ring-buffer handoff assumes slot p %% kv_len alignment
+        assert S % kv_len == 0, (S, kv_len)
+
+    cross = (
+        (lambda pa, hx: _cross_attn(cfg, pa, hx, enc_out))
+        if cfg.enc_layers
+        else None
+    )
+
+    def step(carry, inp):
+        p, w = inp
+        x = carry
+        x, kv, ssm_state, xkv = _layer_fwd(
+            cfg, p, x, pos, w, collect_cache=True, cross_fn=cross
+        )
+        outs = {}
+        if kv is not None:
+            k, v = kv  # (B, KVH, S, D)
+            if kv_len and kv_len < S:
+                k, v = k[:, :, -kv_len:], v[:, :, -kv_len:]
+            elif kv_len and kv_len > S:
+                padw = ((0, 0), (0, 0), (0, kv_len - S), (0, 0))
+                k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+            outs["k"], outs["v"] = k, v
+        if ssm_state is not None:
+            outs["state"] = ssm_state
+        if xkv is not None:
+            outs["xk"], outs["xv"] = xkv
+        return x, outs
+
+    x, collected = jax.lax.scan(step, x, (params["layers"], windows))
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = L.unembed(x[:, -1:], params["embed"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_cache = dict(cache)
+    for key in ("k", "v", "state", "xk", "xv"):
+        if key in collected:
+            new_cache[key] = collected[key]
+    new_cache["pos"] = jnp.asarray(S, dtype=jnp.int32)
+    return logits, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig, params: PyTree, cache: PyTree, tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step.  tokens: (B, 1) -> logits (B, 1, V), new cache."""
+    x = L.embed(tokens, params["embed"]) * math.sqrt(cfg.d_model)
+    B = x.shape[0]
+    p_now = cache["pos"]
+    pos = _positions(cfg, B, 1, offset=0) + p_now
+    windows = layer_windows(cfg)
+    kv_len = cache["k"].shape[3] if "k" in cache else 0
+
+    scanned = {k: cache[k] for k in ("k", "v", "state", "xk", "xv") if k in cache}
+
+    def step(carry, inp):
+        p, w, sc = inp
+        x = carry
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        mix = jnp.zeros_like(x)
+        new_sc = dict(sc)
+        if not cfg.attn_free:
+            q, k1, v1 = L.qkv_proj(p["attn"], h, cfg)
+            q = _rope_q(cfg, q, pos)
+            k1 = _rope_q(cfg, k1, pos)
+            slot = p_now % kv_len
+            K = jax.lax.dynamic_update_slice(
+                sc["k"], k1.astype(sc["k"].dtype), (0, 0, slot, 0)
+            )
+            V = jax.lax.dynamic_update_slice(
+                sc["v"], v1.astype(sc["v"].dtype), (0, 0, slot, 0)
+            )
+            new_sc["k"], new_sc["v"] = K, V
+            length = jnp.minimum(p_now + 1, kv_len)
+            # per-layer window: when the uniform stacked cache is longer
+            # than a local layer's window (global layers force max length),
+            # mask the excess; ring wraparound approximates window by slot.
+            a = L.decode_attention(
+                q, K, V, length=length,
+                window=jnp.where(w > 0, w, 0),
+                softcap=cfg.attn_softcap,
+            )
+            a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+            a = jnp.einsum("bsh,hd->bsd", a, p["attn"]["wo"])
+            if cfg.post_norms:
+                a = L.rmsnorm(a, p["post_ln1"], cfg.norm_eps)
+            mix = mix + a
+        if cfg.ssm_state:
+            s, st = L.ssd_decode_step(p["ssd"], h, sc["state"], cfg)
+            new_sc["state"] = st
+            mix = mix + s
+        x = x + mix
+        if cfg.enc_layers:
+            hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dh->bsh", hx, p["xattn"]["wq"]).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim
+            ).transpose(0, 2, 1, 3)
+            a = L.decode_attention(
+                q, sc["xk"], sc["xv"], length=jnp.asarray(cfg.enc_frames)
+            )
+            a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+            x = x + jnp.einsum("bsh,hd->bsd", a, p["xattn"]["wo"])
+        if cfg.d_ff:
+            h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            f = jnp.zeros_like(x)
+            if cfg.moe_experts:
+                f = f + L.moe(p["moe"], h2, cfg.moe_top_k, cfg.moe_capacity_factor, act=cfg.act)
+                if cfg.moe_dense_residual:
+                    f = f + L.mlp(p["mlp"], h2, cfg.act)
+            else:
+                f = L.mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norms:
+                f = L.rmsnorm(f, p["post_ln2"], cfg.norm_eps)
+            x = x + f
+        return x, new_sc
+
+    x, new_scanned = jax.lax.scan(step, x, (params["layers"], windows, scanned))
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_cache = dict(cache)
+    new_cache.update(new_scanned)
+    new_cache["pos"] = p_now + 1
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from .tune import tune_workload, TuneResult  # noqa: F401
+from .database import Database  # noqa: F401

@@ -1,0 +1,147 @@
+"""Gradient-boosted regression trees (pure numpy) — the learned cost model.
+
+The paper uses a tree-boosting cost model updated online from measured
+latencies (§4 "Cost model").  XGBoost is not available offline, so this is a
+compact exact-greedy GBDT: squared-error boosting of depth-limited trees.
+Targets are per-task normalized throughput scores (best measured latency /
+latency ∈ (0, 1]), so the model ranks candidates; ranking is all the search
+consumes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class _TreeNode:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+    is_leaf: bool = True
+
+
+class RegressionTree:
+    def __init__(self, max_depth: int = 4, min_samples: int = 4):
+        self.max_depth = max_depth
+        self.min_samples = min_samples
+        self.nodes: List[_TreeNode] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        self.nodes = []
+        self._build(X, y, 0)
+        return self
+
+    def _build(self, X, y, depth) -> int:
+        idx = len(self.nodes)
+        node = _TreeNode(value=float(y.mean()) if len(y) else 0.0)
+        self.nodes.append(node)
+        if depth >= self.max_depth or len(y) < self.min_samples or np.allclose(y, y[0]):
+            return idx
+        best = self._best_split(X, y)
+        if best is None:
+            return idx
+        f, t, gain = best
+        mask = X[:, f] <= t
+        node.feature, node.threshold, node.is_leaf = f, t, False
+        node.left = self._build(X[mask], y[mask], depth + 1)
+        node.right = self._build(X[~mask], y[~mask], depth + 1)
+        return idx
+
+    def _best_split(self, X, y):
+        n, d = X.shape
+        base = ((y - y.mean()) ** 2).sum()
+        best = None
+        best_gain = 1e-8
+        for f in range(d):
+            vals = X[:, f]
+            order = np.argsort(vals, kind="stable")
+            xs, ys = vals[order], y[order]
+            # candidate thresholds at value changes
+            csum = np.cumsum(ys)
+            csq = np.cumsum(ys**2)
+            total, total_sq = csum[-1], csq[-1]
+            for i in range(self.min_samples - 1, n - self.min_samples):
+                if xs[i] == xs[i + 1]:
+                    continue
+                nl = i + 1
+                nr = n - nl
+                sl, sql = csum[i], csq[i]
+                sr, sqr = total - sl, total_sq - sql
+                ssl = sql - sl * sl / nl
+                ssr = sqr - sr * sr / nr
+                gain = base - (ssl + ssr)
+                if gain > best_gain:
+                    best_gain = gain
+                    best = (f, float((xs[i] + xs[i + 1]) / 2), gain)
+        return best
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        out = np.empty(len(X), dtype=np.float64)
+        for r in range(len(X)):
+            i = 0
+            while not self.nodes[i].is_leaf:
+                nd = self.nodes[i]
+                i = nd.left if X[r, nd.feature] <= nd.threshold else nd.right
+            out[r] = self.nodes[i].value
+        return out
+
+
+class GBDTCostModel:
+    """Squared-error gradient boosting; ``update`` refits on all data so far
+    (dataset sizes here are hundreds of rows — exact refit is cheap)."""
+
+    def __init__(
+        self,
+        n_trees: int = 50,
+        learning_rate: float = 0.15,
+        max_depth: int = 4,
+        seed: int = 0,
+    ):
+        self.n_trees = n_trees
+        self.lr = learning_rate
+        self.max_depth = max_depth
+        self.trees: List[RegressionTree] = []
+        self.base = 0.0
+        self._X: Optional[np.ndarray] = None
+        self._y: Optional[np.ndarray] = None
+
+    @property
+    def trained(self) -> bool:
+        return bool(self.trees)
+
+    def update(self, X: np.ndarray, y: np.ndarray) -> None:
+        X = np.asarray(X, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float64)
+        if self._X is None:
+            self._X, self._y = X, y
+        else:
+            self._X = np.concatenate([self._X, X])
+            self._y = np.concatenate([self._y, y])
+        self._fit(self._X, self._y)
+
+    def _fit(self, X, y):
+        self.trees = []
+        self.base = float(y.mean())
+        pred = np.full(len(y), self.base)
+        for _ in range(self.n_trees):
+            resid = y - pred
+            if np.abs(resid).max() < 1e-9:
+                break
+            t = RegressionTree(max_depth=self.max_depth).fit(X, resid)
+            pred = pred + self.lr * t.predict(X)
+            self.trees.append(t)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float32)
+        if not self.trees:
+            return np.zeros(len(X))
+        out = np.full(len(X), self.base)
+        for t in self.trees:
+            out = out + self.lr * t.predict(X)
+        return out

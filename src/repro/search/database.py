@@ -1,0 +1,84 @@
+"""Tuning-record database.
+
+Persists (workload key → top-k records) as JSON.  A record holds the
+serialized trace, its decisions, the measured latency, and provenance.
+Model layers look up tuned kernel parameters by workload key at build time
+(DESIGN.md §4) — this is the end-to-end integration point of Appendix A.6.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from ..core.trace import Trace
+
+
+@dataclass
+class TuningRecord:
+    workload_key: str
+    trace_json: str
+    latency_s: float
+    timestamp: float = 0.0
+    meta: Dict = field(default_factory=dict)
+
+    def trace(self) -> Trace:
+        return Trace.from_json(self.trace_json)
+
+
+class Database:
+    def __init__(self, path: Optional[str] = None, top_k: int = 5):
+        self.path = path
+        self.top_k = top_k
+        self.records: Dict[str, List[TuningRecord]] = {}
+        if path and os.path.exists(path):
+            self.load()
+
+    # -- persistence (atomic rename so concurrent readers never see junk) --
+
+    def load(self) -> None:
+        with open(self.path) as f:
+            raw = json.load(f)
+        self.records = {
+            k: [TuningRecord(**r) for r in v] for k, v in raw.items()
+        }
+
+    def save(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(
+                {k: [asdict(r) for r in v] for k, v in self.records.items()}, f
+            )
+        os.replace(tmp, self.path)
+
+    # -- API ----------------------------------------------------------------
+
+    def put(self, rec: TuningRecord) -> None:
+        rows = self.records.setdefault(rec.workload_key, [])
+        rows.append(rec)
+        rows.sort(key=lambda r: r.latency_s)
+        del rows[self.top_k:]
+        self.save()
+
+    def best(self, workload_key: str) -> Optional[TuningRecord]:
+        rows = self.records.get(workload_key)
+        return rows[0] if rows else None
+
+    def top(self, workload_key: str, k: int) -> List[TuningRecord]:
+        return self.records.get(workload_key, [])[:k]
+
+    def keys(self) -> List[str]:
+        return list(self.records.keys())
+
+
+def workload_key(name: str, **shape_kwargs) -> str:
+    parts = [name] + [f"{k}={v}" for k, v in sorted(shape_kwargs.items())]
+    return "/".join(parts)

@@ -1,0 +1,228 @@
+"""Learning-driven evolutionary search (paper §4, Figure 7).
+
+MAP inference over P(τ|e0) ∝ exp(−f(g(e0, τ))) · P(τ):
+
+* the prior P(τ) is the space generator (module composition) — initial
+  population = samples from it;
+* proposals mutate sampling decisions of traces (parallel-chain MCMC view);
+* the validator rejects proposals outside the support;
+* annealed Metropolis–Hastings accepts/rejects using the *learned* cost
+  model f̂ (temperature decays across generations);
+* an ε-greedy slice of each round is measured on hardware (here: the CPU
+  jnp lowering), the database is updated, and f̂ is retrained online.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.modules import Module, SpaceGenerator
+from ..core.mutators import DEFAULT_MUTATORS, mutate
+from ..core.schedule import Schedule
+from ..core.tir import PrimFunc
+from ..core.trace import Trace
+from ..core.validator import validate_trace
+from .cost_model import GBDTCostModel
+from .database import Database, TuningRecord
+from .features import extract_features
+from .runner import LocalRunner
+
+
+@dataclass
+class SearchConfig:
+    max_trials: int = 64            # total hardware measurements
+    population: int = 24            # candidates per round
+    init_random: int = 16           # initial random samples from the space
+    generations: int = 4            # MH evolution generations per round
+    measure_per_round: int = 8      # ε-greedy measured slice
+    epsilon: float = 0.2            # fraction of measured picks taken randomly
+    temp_init: float = 0.3          # annealing temperature (score units)
+    temp_decay: float = 0.7
+    seed: int = 0
+
+
+@dataclass
+class Candidate:
+    trace: Trace
+    schedule: Schedule
+    features: np.ndarray
+    score: float = 0.0  # model-predicted normalized throughput
+
+
+class EvolutionarySearch:
+    def __init__(
+        self,
+        func: PrimFunc,
+        space: SpaceGenerator,
+        runner: Optional[LocalRunner] = None,
+        database: Optional[Database] = None,
+        workload_key: str = "",
+        config: Optional[SearchConfig] = None,
+        cost_model: Optional[GBDTCostModel] = None,
+        verbose: bool = False,
+    ):
+        self.func = func
+        self.space = space
+        self.runner = runner or LocalRunner()
+        self.db = database
+        self.key = workload_key or func.name
+        self.cfg = config or SearchConfig()
+        self.model = cost_model or GBDTCostModel(seed=self.cfg.seed)
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.verbose = verbose
+        # measured state
+        self.measured: Dict[str, float] = {}  # decisions-key -> latency
+        self.best_latency = float("inf")
+        self.best_trace: Optional[Trace] = None
+        self.history: List[Tuple[int, float]] = []  # (trial, best so far)
+        self._X: List[np.ndarray] = []
+        self._lat: List[float] = []
+
+    # -- helpers --------------------------------------------------------------
+
+    def _dkey(self, trace: Trace) -> str:
+        return str(sorted(trace.decisions().items(), key=lambda kv: kv[0]))
+
+    def _validated(self, trace: Trace) -> Optional[Candidate]:
+        res = validate_trace(self.func, trace)
+        if not res.ok:
+            return None
+        feats = extract_features(res.schedule)
+        return Candidate(res.schedule.trace, res.schedule, feats)
+
+    def _sample_initial(self, n: int) -> List[Candidate]:
+        out: List[Candidate] = []
+        tries = 0
+        while len(out) < n and tries < n * 10:
+            tries += 1
+            seed = int(self.rng.integers(0, 2**31))
+            sch = self.space.generate(self.func, seed=seed)
+            cand = self._validated(sch.trace)
+            if cand is not None:
+                out.append(cand)
+        return out
+
+    def _score(self, cands: List[Candidate]) -> None:
+        if not cands:
+            return
+        X = np.stack([c.features for c in cands])
+        if self.model.trained:
+            s = self.model.predict(X)
+        else:
+            s = self.rng.random(len(cands)) * 1e-3  # untrained: explore
+        for c, v in zip(cands, s):
+            c.score = float(v)
+
+    # -- evolution -----------------------------------------------------------
+
+    def _evolve(self, population: List[Candidate]) -> List[Candidate]:
+        """Annealed-MH evolution of the candidate pool via trace mutation."""
+        temp = self.cfg.temp_init
+        pool = list(population)
+        self._score(pool)
+        for gen in range(self.cfg.generations):
+            nxt: List[Candidate] = []
+            for cand in pool:
+                prop_trace = mutate(self.func, cand.trace, self.rng)
+                if prop_trace is None:
+                    nxt.append(cand)
+                    continue
+                prop = self._validated(prop_trace)
+                if prop is None:  # validator rejection
+                    nxt.append(cand)
+                    continue
+                self._score([prop])
+                delta = prop.score - cand.score
+                if delta >= 0 or self.rng.random() < math.exp(delta / max(temp, 1e-6)):
+                    nxt.append(prop)  # MH accept
+                else:
+                    nxt.append(cand)
+            pool = nxt
+            temp *= self.cfg.temp_decay
+        return pool
+
+    def _select_to_measure(self, pool: List[Candidate], k: int) -> List[Candidate]:
+        """ε-greedy: top-(1-ε)k by model score + εk random, dedup measured."""
+        fresh = [c for c in pool if self._dkey(c.trace) not in self.measured]
+        if not fresh:
+            return []
+        fresh.sort(key=lambda c: -c.score)
+        n_greedy = max(1, int(round(k * (1 - self.cfg.epsilon))))
+        picked = fresh[:n_greedy]
+        rest = fresh[n_greedy:]
+        if rest and k - len(picked) > 0:
+            extra = self.rng.choice(
+                len(rest), size=min(k - len(picked), len(rest)), replace=False
+            )
+            picked += [rest[i] for i in extra]
+        # dedup by decision key
+        seen = set()
+        out = []
+        for c in picked:
+            dk = self._dkey(c.trace)
+            if dk not in seen:
+                seen.add(dk)
+                out.append(c)
+        return out[:k]
+
+    def _measure(self, cands: List[Candidate]) -> None:
+        for c in cands:
+            res = self.runner.measure(c.schedule)
+            lat = res.latency_s
+            self.measured[self._dkey(c.trace)] = lat
+            if res.ok:
+                self._X.append(c.features)
+                self._lat.append(lat)
+                if lat < self.best_latency:
+                    self.best_latency = lat
+                    self.best_trace = c.trace
+                    if self.db is not None:
+                        self.db.put(
+                            TuningRecord(
+                                self.key,
+                                c.trace.to_json(),
+                                lat,
+                                time.time(),
+                                {"func": self.func.name},
+                            )
+                        )
+            self.history.append((len(self.measured), self.best_latency))
+        # retrain the model on normalized throughput scores
+        if self._lat:
+            best = min(self._lat)
+            y = np.array([best / l for l in self._lat])
+            self.model._X = None  # full refit on all data
+            self.model._y = None
+            self.model.update(np.stack(self._X), y)
+
+    # -- main loop -------------------------------------------------------------
+
+    def tune(self) -> "EvolutionarySearch":
+        init = self._sample_initial(self.cfg.init_random)
+        if not init:
+            raise RuntimeError(f"{self.key}: space generated no valid samples")
+        self._measure(init[: self.cfg.measure_per_round])
+        pool = init
+        while len(self.measured) < self.cfg.max_trials:
+            # refill population with fresh randoms + survivors
+            survivors = sorted(pool, key=lambda c: -c.score)[: self.cfg.population // 2]
+            fresh = self._sample_initial(self.cfg.population - len(survivors))
+            pool = survivors + fresh
+            pool = self._evolve(pool)
+            to_measure = self._select_to_measure(
+                pool, min(self.cfg.measure_per_round, self.cfg.max_trials - len(self.measured))
+            )
+            if not to_measure:
+                break
+            self._measure(to_measure)
+            if self.verbose:
+                print(
+                    f"[{self.key}] trials={len(self.measured)} "
+                    f"best={self.best_latency*1e6:.1f}us"
+                )
+        return self

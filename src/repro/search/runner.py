@@ -1,0 +1,107 @@
+"""Measurement runner: f(e) — wall-clock latency of a lowered schedule.
+
+Builds the jnp lowering, jits, and times it on this host.  Guards against
+pathological schedules (the validator's iteration cap is a first line;
+the runner adds wall-clock timeouts and returns ``inf`` on failure, which
+the search treats as rejection — mirroring real autotuners' timeout
+semantics).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..backends import jnp_backend
+from ..core.schedule import Schedule
+from ..core.tir import PrimFunc, random_inputs
+
+
+@dataclass
+class MeasureResult:
+    latency_s: float  # median wall time; inf on failure
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return np.isfinite(self.latency_s)
+
+
+class LocalRunner:
+    """Measure schedules on the local host via the jnp backend."""
+
+    def __init__(
+        self,
+        repeats: int = 3,
+        warmup: int = 1,
+        timeout_s: float = 10.0,
+        check_against_oracle: bool = False,
+    ):
+        self.repeats = repeats
+        self.warmup = warmup
+        self.timeout_s = timeout_s
+        self.check = check_against_oracle
+        self._inputs_cache: Dict[str, Dict] = {}
+        self._oracle_cache: Dict[str, Callable] = {}
+
+    def _inputs(self, func: PrimFunc):
+        key = func.name + str(tuple(b.shape for b in func.inputs))
+        if key not in self._inputs_cache:
+            self._inputs_cache[key] = {
+                k: jax.device_put(v) for k, v in random_inputs(func, 0).items()
+            }
+        return self._inputs_cache[key]
+
+    def measure(self, sch: Schedule) -> MeasureResult:
+        func = sch.func
+        ins = self._inputs(func)
+        try:
+            lowered = jnp_backend.build(sch)
+            fn = jax.jit(lowered.fn)
+            t0 = time.perf_counter()
+            out = fn(ins)
+            jax.block_until_ready(out)
+            compile_and_first = time.perf_counter() - t0
+            if compile_and_first > self.timeout_s:
+                return MeasureResult(float("inf"), "timeout (first call)")
+            if self.check:
+                self._check_correct(func, out, ins)
+            for _ in range(self.warmup):
+                jax.block_until_ready(fn(ins))
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(ins))
+                times.append(time.perf_counter() - t0)
+            return MeasureResult(float(np.median(times)))
+        except Exception as e:  # lowering/compile/runtime failure -> reject
+            return MeasureResult(float("inf"), f"{type(e).__name__}: {e}")
+
+    def measure_callable(self, fn: Callable, ins) -> float:
+        jax.block_until_ready(fn(ins))
+        times = []
+        for _ in range(max(self.repeats, 2)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(ins))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    def baseline(self, func: PrimFunc) -> float:
+        """Latency of the naive whole-domain jnp lowering (oracle)."""
+        ins = self._inputs(func)
+        key = func.name
+        if key not in self._oracle_cache:
+            self._oracle_cache[key] = jax.jit(jnp_backend.build_oracle(func))
+        return self.measure_callable(self._oracle_cache[key], ins)
+
+    def _check_correct(self, func: PrimFunc, out, ins) -> None:
+        oracle = jax.jit(jnp_backend.build_oracle(func))
+        ref = oracle(ins)
+        for k in ref:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), np.asarray(ref[k]), rtol=5e-3, atol=1e-3
+            )

@@ -1,0 +1,99 @@
+"""Multi-task tuning scheduler (end-to-end model workflow, Appendix A.6).
+
+A model extracts several tensor-program tasks (one per distinct hot
+operator shape).  The scheduler allocates measurement trials across tasks
+with a gradient-style policy: each round it picks the task whose recent
+best-latency slope (weighted by task FLOPs) promises the largest end-to-end
+gain — the same idea as TVM's gradient task scheduler — and runs one
+search round for it.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.modules import Module, SpaceGenerator, default_modules
+from ..core.tir import PrimFunc
+from .database import Database, workload_key
+from .evolutionary import EvolutionarySearch, SearchConfig
+from .runner import LocalRunner
+
+
+@dataclass
+class TuneTask:
+    key: str
+    func: PrimFunc
+    weight: float = 1.0  # e.g. occurrence count in the model
+    use_mxu: bool = False
+
+
+class TaskScheduler:
+    def __init__(
+        self,
+        tasks: Sequence[TuneTask],
+        database: Optional[Database] = None,
+        config: Optional[SearchConfig] = None,
+        runner: Optional[LocalRunner] = None,
+        verbose: bool = False,
+    ):
+        self.tasks = list(tasks)
+        self.db = database
+        self.runner = runner or LocalRunner()
+        cfg = config or SearchConfig()
+        self.verbose = verbose
+        self.searches: List[EvolutionarySearch] = []
+        for t in self.tasks:
+            space = SpaceGenerator(default_modules(use_mxu=t.use_mxu))
+            self.searches.append(
+                EvolutionarySearch(
+                    t.func,
+                    space,
+                    runner=self.runner,
+                    database=self.db,
+                    workload_key=t.key,
+                    config=SearchConfig(**{**cfg.__dict__}),
+                )
+            )
+        self._initialized = [False] * len(self.tasks)
+
+    def _gradient(self, i: int) -> float:
+        """Expected end-to-end gain of giving task i one more round."""
+        s = self.searches[i]
+        t = self.tasks[i]
+        if not self._initialized[i] or not np.isfinite(s.best_latency):
+            return float("inf")  # cold tasks first
+        h = s.history
+        if len(h) < 2:
+            return float("inf")
+        # recent slope of best latency, weighted by task weight x latency
+        window = h[-8:]
+        d = window[0][1] - window[-1][1]
+        return t.weight * max(d, 0.0) + 1e-9 * t.weight * s.best_latency
+
+    def tune(self, total_rounds: int = 16) -> Dict[str, float]:
+        for r in range(total_rounds):
+            # pick task with max gradient
+            g = [self._gradient(i) for i in range(len(self.tasks))]
+            i = int(np.argmax(g))
+            s = self.searches[i]
+            if not self._initialized[i]:
+                init = s._sample_initial(s.cfg.init_random)
+                if init:
+                    s._measure(init[: s.cfg.measure_per_round])
+                self._initialized[i] = True
+            else:
+                pool = s._sample_initial(s.cfg.population)
+                pool = s._evolve(pool)
+                picks = s._select_to_measure(pool, s.cfg.measure_per_round)
+                if picks:
+                    s._measure(picks)
+            if self.verbose:
+                print(
+                    f"round {r}: task={self.tasks[i].key} "
+                    f"best={s.best_latency*1e6:.1f}us"
+                )
+        return {t.key: s.best_latency for t, s in zip(self.tasks, self.searches)}

@@ -1,0 +1,118 @@
+"""Top-level tuning API.
+
+``tune_workload`` = paper Figure 7 end-to-end for one tensor program.
+``apply_best`` replays the best database trace and returns the lowered
+executable — the integration point used by models and benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..backends import jnp_backend
+from ..core.modules import Module, SpaceGenerator, default_modules
+from ..core.schedule import Schedule
+from ..core.tir import PrimFunc
+from ..core.trace import Trace
+from ..core.validator import validate_trace
+from ..core.workloads import WORKLOADS, get_workload
+from .database import Database, TuningRecord, workload_key
+from .evolutionary import EvolutionarySearch, SearchConfig
+from .runner import LocalRunner
+
+
+@dataclass
+class TuneResult:
+    workload_key: str
+    best_latency_s: float
+    baseline_latency_s: float   # whole-domain jnp (XLA-native) oracle
+    default_latency_s: float    # first valid sample from the space, untuned
+    trials: int
+    best_trace: Trace
+    history: list
+    tuning_time_s: float = 0.0
+
+    @property
+    def speedup_vs_baseline(self) -> float:
+        return self.baseline_latency_s / self.best_latency_s
+
+    @property
+    def speedup_vs_default(self) -> float:
+        """The search's contribution: tuned vs untuned schedule."""
+        return self.default_latency_s / self.best_latency_s
+
+
+def tune_workload(
+    name: str,
+    shape_kwargs: Optional[Dict] = None,
+    modules: Optional[Sequence[Module]] = None,
+    use_mxu: bool = False,
+    config: Optional[SearchConfig] = None,
+    database: Optional[Database] = None,
+    runner: Optional[LocalRunner] = None,
+    verbose: bool = False,
+) -> TuneResult:
+    import time
+
+    shape_kwargs = shape_kwargs or {}
+    func = get_workload(name, **shape_kwargs)
+    key = workload_key(name, **shape_kwargs)
+    space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
+    runner = runner or LocalRunner()
+    t0 = time.perf_counter()
+    search = EvolutionarySearch(
+        func,
+        space,
+        runner=runner,
+        database=database,
+        workload_key=key,
+        config=config,
+        verbose=verbose,
+    ).tune()
+    dt = time.perf_counter() - t0
+    baseline = runner.baseline(func)
+    # canonical untuned point: first valid sample of the space (seed 0..)
+    from ..core.validator import validate_trace
+
+    default_lat = float("nan")
+    for s0 in range(16):
+        sch0 = space.generate(func, seed=s0)
+        v = validate_trace(func, sch0.trace)
+        if v.ok:
+            default_lat = runner.measure(v.schedule).latency_s
+            break
+    return TuneResult(
+        workload_key=key,
+        best_latency_s=search.best_latency,
+        baseline_latency_s=baseline,
+        default_latency_s=default_lat,
+        trials=len(search.measured),
+        best_trace=search.best_trace,
+        history=search.history,
+        tuning_time_s=dt,
+    )
+
+
+def apply_trace(func: PrimFunc, trace: Trace):
+    """Replay a trace and lower it; returns (schedule, jitted fn)."""
+    res = validate_trace(func, trace)
+    if not res.ok:
+        raise ValueError(f"invalid trace for {func.name}: {res.reason}")
+    lowered = jnp_backend.build(res.schedule)
+    return res.schedule, lowered
+
+
+def apply_best(
+    name: str, database: Database, shape_kwargs: Optional[Dict] = None
+):
+    """Lower the database-best trace for a workload (A.6 integration)."""
+    shape_kwargs = shape_kwargs or {}
+    key = workload_key(name, **shape_kwargs)
+    rec = database.best(key)
+    if rec is None:
+        raise KeyError(f"no tuning record for {key}")
+    func = get_workload(name, **shape_kwargs)
+    return apply_trace(func, rec.trace())

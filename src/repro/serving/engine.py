@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+Request lifecycle: submit → (batched) prefill → decode loop → done.  The
+engine keeps one fixed-shape batch slot per concurrent request so every
+decode step is a single compiled ``decode_step`` call (static shapes; the
+dry-run's ``decode_*`` cells lower exactly this function).  Greedy or
+temperature sampling.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import Model, build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 4,
+        max_seq: int = 256,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.rng = np.random.default_rng(seed)
+        self._prefill = jax.jit(
+            lambda p, c, toks: self.model.prefill(p, c, tokens=toks)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+        self._requests: List[Request] = []
+        self.stats: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_steps": 0, "prefill_s": 0.0,
+            "decode_s": 0.0,
+        }
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> Request:
+        r = Request(len(self._requests), np.asarray(prompt, np.int32),
+                    max_new_tokens, temperature)
+        self._requests.append(r)
+        return r
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def run(self) -> List[Request]:
+        """Serve all submitted requests in fixed-size batches."""
+        for i in range(0, len(self._requests), self.max_batch):
+            self._run_batch(self._requests[i: i + self.max_batch])
+        return self._requests
+
+    def _run_batch(self, reqs: List[Request]) -> None:
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((B, S), np.int32)
+        for j, r in enumerate(reqs):
+            prompts[j, S - len(r.prompt):] = r.prompt  # left-pad
+        cache = self.model.init_cache(B, max_seq=self.max_seq)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, cache, jnp.asarray(prompts))
+        logits = np.asarray(logits.astype(jnp.float32))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += B * S
+        nxt = np.array(
+            [self._sample(logits[j, 0], r.temperature) for j, r in enumerate(reqs)],
+            np.int32,
+        )
+        for j, r in enumerate(reqs):
+            r.generated.append(int(nxt[j]))
+        max_new = max(r.max_new_tokens for r in reqs)
+        t0 = time.perf_counter()
+        for step in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(nxt[:, None])
+            )
+            self.stats["decode_steps"] += 1
+            la = np.asarray(logits[:, 0].astype(jnp.float32))
+            nxt = np.array(
+                [self._sample(la[j], r.temperature) for j, r in enumerate(reqs)],
+                np.int32,
+            )
+            for j, r in enumerate(reqs):
+                if len(r.generated) < r.max_new_tokens:
+                    r.generated.append(int(nxt[j]))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for r in reqs:
+            r.done = True

@@ -1,0 +1,67 @@
+"""Train-step factory: value_and_grad + microbatch accumulation + AdamW.
+
+``make_train_step`` returns the jit-able function the dry-run lowers and
+the real trainer runs.  Microbatching scans gradient accumulation over the
+leading batch split (pipeline-style activation memory bound); remat is
+applied inside the model's layer scan (transformer.loss_fn(remat=True)).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.registry import Model
+from .optimizer import OptConfig, adamw_update
+
+PyTree = Any
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptConfig,
+    num_microbatches: int = 1,
+) -> Callable:
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: Dict):
+        if num_microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((num_microbatches, x.shape[0] // num_microbatches) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+        new_params, new_opt = adamw_update(
+            opt_cfg, grads, opt_state, params,
+            compress_seed=jax.random.PRNGKey(0),
+        )
+        metrics = {"loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params: PyTree, batch: Dict):
+        return model.loss(params, batch)
+
+    return eval_step

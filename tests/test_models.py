@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU asserting output shapes + no NaNs; prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, SHAPES, ShapeConfig, cell_supported, get_config
+from repro.models.registry import build_model, make_train_batch
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_and_loss(self, arch):
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_train_batch(cfg, SMOKE_SHAPE)
+        loss = jax.jit(m.loss)(params, batch)
+        assert np.isfinite(float(loss))
+        # logits shape
+        if "tokens" in batch:
+            logits = m.forward(params, tokens=batch["tokens"][:, :-1],
+                               frames=batch.get("frames"))
+            assert logits.shape == (2, 32, cfg.vocab)
+            assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    def test_train_step_reduces_loss(self, arch):
+        from repro.training.optimizer import OptConfig, adamw_init
+        from repro.training.train_loop import make_train_step
+
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(m, OptConfig(lr=1e-3, warmup_steps=1,
+                                                    total_steps=10)))
+        batch = make_train_batch(cfg, SMOKE_SHAPE)
+        losses = []
+        for _ in range(8):  # same batch -> loss must drop
+            params, opt, metrics = step(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        assert all(np.isfinite(l) for l in losses)
+        assert losses[-1] < losses[0]
+
+    def test_decode_matches_forward(self, arch):
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        B, S = 2, 16
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+        extra = {}
+        if cfg.enc_layers:
+            extra["frames"] = jnp.asarray(
+                rng.standard_normal((B, cfg.enc_frames, cfg.d_model)),
+                jnp.bfloat16,
+            )
+        full = m.forward(params, tokens=toks, **extra)
+        cache = m.init_cache(B, max_seq=S + 16)
+        logits_p, cache = m.prefill(params, cache, tokens=toks[:, :S], **extra)
+        # prefill last-position logits == forward at S-1
+        np.testing.assert_allclose(
+            np.asarray(logits_p[:, 0], np.float32),
+            np.asarray(full[:, S - 1], np.float32),
+            rtol=0.06, atol=0.05,
+        )
+        # decode at position S == forward at S
+        logits_d, cache = m.decode_step(params, cache, toks[:, S: S + 1])
+        lf = np.asarray(full[:, S], np.float32)
+        ld = np.asarray(logits_d[:, 0], np.float32)
+        err = np.abs(lf - ld).max() / (np.abs(lf).max() + 1e-6)
+        assert err < 0.05, f"{arch}: decode diverges from forward ({err})"
+
+    def test_microbatched_grad_accumulation(self, arch):
+        from repro.training.optimizer import OptConfig, adamw_init
+        from repro.training.train_loop import make_train_step
+
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_train_batch(cfg, ShapeConfig("s", 16, 4, "train"))
+        opt = adamw_init(params)
+        s1 = jax.jit(make_train_step(m, OptConfig(), num_microbatches=1))
+        s2 = jax.jit(make_train_step(m, OptConfig(), num_microbatches=2))
+        _, _, m1 = s1(params, opt, batch)
+        _, _, m2 = s2(params, opt, batch)
+        assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+        # microbatching averages per-microbatch losses; same data, close value
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.2
+
+
+class TestCellSupportMatrix:
+    def test_long_context_skips_match_design(self):
+        sub_q = {"mamba2-370m", "hymba-1.5b"}
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            ok, reason = cell_supported(cfg, SHAPES["long_500k"])
+            assert ok == (arch in sub_q), (arch, reason)
+
+    def test_all_other_cells_supported(self):
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for sh in ("train_4k", "prefill_32k", "decode_32k"):
+                ok, _ = cell_supported(cfg, SHAPES[sh])
+                assert ok
+
+    def test_param_counts_match_assignment_scale(self):
+        # sanity: derived param counts are in the right ballpark
+        expect = {
+            "smollm-135m": (0.10e9, 0.25e9),
+            "mamba2-370m": (0.25e9, 0.6e9),
+            "gemma2-2b": (2e9, 3.5e9),
+            "stablelm-3b": (2e9, 4e9),
+            "qwen1.5-110b": (90e9, 130e9),
+            "olmoe-1b-7b": (5e9, 8e9),
+            "arctic-480b": (380e9, 520e9),
+            # gated-MLP variant (3DF vs whisper's 2DF) + cross-attn stack
+            "whisper-medium": (0.7e9, 1.1e9),
+            "qwen2-vl-2b": (1.5e9, 3e9),
+            "hymba-1.5b": (1e9, 2.2e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = get_config(arch).params_count()
+            assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+class TestLongContextDecode:
+    @pytest.mark.parametrize("arch", ["mamba2-370m", "hymba-1.5b"])
+    def test_bounded_state_decode(self, arch):
+        """Sub-quadratic archs decode with bounded cache (ring/state)."""
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        big_ctx = 4096  # smoke-scale stand-in for 512k
+        cache = m.cache_specs(1, max_seq=big_ctx)
+        if "k" in cache:
+            kv_len = cache["k"].shape[3]
+            assert kv_len <= big_ctx
+        # actually run a few decode steps at a huge declared context
+        cache = m.init_cache(1, max_seq=big_ctx)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        for _ in range(3):
+            logits, cache = m.decode_step(params, cache, tok)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()

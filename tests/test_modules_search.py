@@ -1,0 +1,149 @@
+"""Transformation modules, space generation, validator, mutators, search."""
+
+import numpy as np
+import pytest
+
+from repro.backends import jnp_backend as J
+from repro.core import workloads as W
+from repro.core.modules import (
+    AutoInline,
+    MultiLevelTiling,
+    ParallelizeVectorizeUnroll,
+    SpaceGenerator,
+    UseMXU,
+    default_modules,
+)
+from repro.core.mutators import mutate
+from repro.core.tir import evaluate_primfunc, random_inputs
+from repro.core.validator import validate_trace
+from repro.search.cost_model import GBDTCostModel
+from repro.search.database import Database, TuningRecord, workload_key
+from repro.search.evolutionary import EvolutionarySearch, SearchConfig
+from repro.search.features import extract_features
+from repro.search.runner import LocalRunner
+from repro.search.tune import apply_best, tune_workload
+
+SPACE_WORKLOADS = ["gmm", "sfm", "c2d", "dense", "dep", "relu"]
+
+
+class TestSpaceGeneration:
+    @pytest.mark.parametrize("name", SPACE_WORKLOADS)
+    def test_generated_schedules_preserve_semantics(self, name):
+        f = W.get_workload(name, **W.REDUCED_KWARGS.get(name, {}))
+        ins = random_inputs(f, 11)
+        ref = evaluate_primfunc(f, ins)
+        gen = SpaceGenerator(default_modules(use_mxu=name in ("gmm", "dense")))
+        checked = 0
+        for s in range(8):
+            sch = gen.generate(f, seed=100 + s)
+            res = validate_trace(f, sch.trace)
+            if not res.ok:
+                continue
+            got = J.build(res.schedule).jit()(ins)
+            for k in ref:
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), ref[k], rtol=3e-4, atol=1e-4
+                )
+            checked += 1
+        assert checked >= 3, f"space for {name} produced too few valid samples"
+
+    def test_spaces_are_diverse(self):
+        f = W.gmm(n=32, m=32, k=32)
+        gen = SpaceGenerator(default_modules())
+        scripts = {gen.generate(f, seed=s).script() for s in range(8)}
+        assert len(scripts) >= 4
+
+    def test_use_mxu_composes(self):
+        """Fig 5: the hardware module composes with generic ones."""
+        f = W.dense(m=32, n=32, k=32, epilogue="bias_relu")
+        gen = SpaceGenerator(
+            [AutoInline(), UseMXU(), MultiLevelTiling(),
+             ParallelizeVectorizeUnroll()]
+        )
+        found_mxu = False
+        for s in range(6):
+            sch = gen.generate(f, seed=s)
+            if any(i.name == "tensorize_mxu" for i in sch.trace.insts):
+                found_mxu = True
+        assert found_mxu
+
+
+class TestMutation:
+    def test_mutations_stay_semantic_or_rejected(self):
+        f = W.gmm(n=32, m=32, k=32)
+        ins = random_inputs(f, 0)
+        gen = SpaceGenerator(default_modules())
+        rng = np.random.default_rng(0)
+        sch = gen.generate(f, seed=5)
+        base = validate_trace(f, sch.trace)
+        assert base.ok
+        n_valid = 0
+        for _ in range(10):
+            t = mutate(f, sch.trace, rng)
+            if t is None:
+                continue
+            res = validate_trace(f, t)
+            if res.ok:
+                got = J.build(res.schedule).jit()(ins)
+                np.testing.assert_allclose(
+                    np.asarray(got["C"]), ins["A"] @ ins["B"], rtol=3e-4,
+                    atol=1e-4,
+                )
+                n_valid += 1
+        assert n_valid >= 3
+
+
+class TestCostModel:
+    def test_gbdt_fits_monotone_signal(self):
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal((200, 8)).astype(np.float32)
+        y = (X[:, 0] * 2 + np.sin(X[:, 1])) + 0.01 * rng.standard_normal(200)
+        m = GBDTCostModel(n_trees=40)
+        m.update(X[:150], y[:150])
+        pred = m.predict(X[150:])
+        corr = np.corrcoef(pred, y[150:])[0, 1]
+        assert corr > 0.8
+
+    def test_features_shape_stable(self):
+        f = W.gmm(n=32, m=32, k=32)
+        gen = SpaceGenerator(default_modules())
+        dims = {
+            extract_features(gen.generate(f, seed=s)).shape for s in range(3)
+        }
+        assert len(dims) == 1
+
+
+class TestSearch:
+    def test_search_improves_over_first_sample(self, tmp_path):
+        db = Database(str(tmp_path / "db.json"))
+        res = tune_workload(
+            "gmm",
+            dict(n=64, m=64, k=64),
+            use_mxu=True,
+            config=SearchConfig(
+                max_trials=16, init_random=6, population=8,
+                measure_per_round=5, generations=2,
+            ),
+            database=db,
+        )
+        assert np.isfinite(res.best_latency_s)
+        first_measured = res.history[0][1]
+        assert res.best_latency_s <= first_measured
+        # database roundtrip -> executable
+        sch, low = apply_best("gmm", db, dict(n=64, m=64, k=64))
+        import jax
+
+        ins = random_inputs(low.func, 0)
+        out = jax.jit(low.fn)(ins)
+        np.testing.assert_allclose(
+            np.asarray(out["C"]), ins["A"] @ ins["B"], rtol=1e-3, atol=1e-3
+        )
+
+    def test_database_topk_and_persistence(self, tmp_path):
+        p = str(tmp_path / "db.json")
+        db = Database(p, top_k=2)
+        for lat in [3.0, 1.0, 2.0]:
+            db.put(TuningRecord("k1", "[]", lat))
+        assert [r.latency_s for r in db.top("k1", 5)] == [1.0, 2.0]
+        db2 = Database(p)
+        assert db2.best("k1").latency_s == 1.0

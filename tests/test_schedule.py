@@ -1,0 +1,214 @@
+"""Schedule primitives: semantics preservation (hypothesis) + trace replay."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.backends import jnp_backend as J
+from repro.core.schedule import Schedule
+from repro.core.tir import ScheduleError, evaluate_primfunc, random_inputs
+from repro.core.trace import Trace
+from repro.core.workloads import c2d, dense, gmm, sfm, REDUCED_KWARGS
+
+
+def _check_semantics(sch, ins, ref, rtol=3e-4):
+    low = J.build(sch)
+    got = low.jit()(ins)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), ref[k], rtol=rtol, atol=1e-4
+        )
+
+
+def _factorize(n, parts, rng):
+    out = [1] * parts
+    rem = n
+    for i in range(parts - 1):
+        divs = [d for d in range(1, rem + 1) if rem % d == 0]
+        f = int(rng.choice(divs))
+        out[i] = f
+        rem //= f
+    out[-1] = rem
+    return out
+
+
+class TestSplitReorderFuse:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_random_tilings_preserve_gmm(self, seed):
+        """Property: any perfect tiling + reorder + vectorize == matmul."""
+        rng = np.random.default_rng(seed)
+        f = gmm(n=16, m=16, k=16)
+        ins = random_inputs(f, 0)
+        sch = Schedule(f, seed=seed)
+        b = sch.get_block("C")
+        i, j, k = sch.get_loops(b)
+        fi = _factorize(16, 2, rng)
+        fj = _factorize(16, 2, rng)
+        fk = _factorize(16, 2, rng)
+        i0, i1 = sch.split(i, fi)
+        j0, j1 = sch.split(j, fj)
+        k0, k1 = sch.split(k, fk)
+        order = [i0, j0, k0, i1, k1, j1]
+        sch.reorder(*order)
+        sch.unroll(i1)
+        sch.unroll(k1)
+        sch.vectorize(j1)
+        _check_semantics(sch, ins, {"C": ins["A"] @ ins["B"]})
+
+    def test_fuse_parallel(self):
+        f = gmm(n=8, m=8, k=8)
+        ins = random_inputs(f, 1)
+        sch = Schedule(f, seed=0)
+        b = sch.get_block("C")
+        i, j, k = sch.get_loops(b)
+        fused = sch.fuse(i, j)
+        sch.parallel(fused)
+        sch.vectorize(k)  # reduce tile
+        _check_semantics(sch, ins, {"C": ins["A"] @ ins["B"]})
+
+    def test_split_requires_perfect_factors(self):
+        sch = Schedule(gmm(n=8, m=8, k=8), seed=0)
+        b = sch.get_block("C")
+        i, _, _ = sch.get_loops(b)
+        with pytest.raises(ScheduleError):
+            sch.split(i, [3, 3])
+
+    def test_reorder_rejects_disjoint_chains(self):
+        f = sfm(m=8, n=8)
+        sch = Schedule(f, seed=0)
+        l1 = sch.get_loops(sch.get_block("rowmax"))[0]
+        l2 = sch.get_loops(sch.get_block("expv"))[0]
+        with pytest.raises(ScheduleError):
+            sch.reorder(l1, l2)
+
+
+class TestFusionPrimitives:
+    def test_inline_pad_into_conv(self):
+        f = c2d(**REDUCED_KWARGS["c2d"])
+        ins = random_inputs(f, 2)
+        ref = evaluate_primfunc(f, ins)
+        sch = Schedule(f, seed=0)
+        sch.compute_inline(sch.get_block("pad"))
+        loops = sch.get_loops(sch.get_block("conv2d"))
+        sch.vectorize(loops[2])
+        _check_semantics(sch, ins, ref)
+
+    def test_compute_at_region_inference(self):
+        f = c2d(**REDUCED_KWARGS["c2d"])
+        ins = random_inputs(f, 3)
+        ref = evaluate_primfunc(f, ins)
+        sch = Schedule(f, seed=0)
+        conv = sch.get_block("conv2d")
+        co, ho, wo, ci, rh, rw = sch.get_loops(conv)
+        ho0, ho1 = sch.split(ho, [4, 4])
+        sch.compute_at(sch.get_block("pad"), ho0)
+        sch.vectorize(wo)
+        _check_semantics(sch, ins, ref)
+
+    def test_reverse_compute_at_epilogue(self):
+        f = dense(m=32, n=32, k=16, epilogue="bias_relu")
+        ins = random_inputs(f, 4)
+        ref = evaluate_primfunc(f, ins)
+        sch = Schedule(f, seed=0)
+        d = sch.get_block("dense")
+        i, j, k = sch.get_loops(d)
+        i0, i1 = sch.split(i, [4, 8])
+        j0, j1 = sch.split(j, [4, 8])
+        sch.reorder(i0, j0, i1, j1)
+        sch.reverse_compute_inline(sch.get_block("relu"))
+        sch.reverse_compute_at(sch.get_block("relu"), j0)
+        sch.unroll(i1)
+        sch.vectorize(j1)
+        ep = sch.get_loops(sch.get_block("relu"))
+        sch.unroll(ep[-2])
+        sch.vectorize(ep[-1])
+        _check_semantics(sch, ins, ref)
+
+    def test_reverse_inline_into_reduction_rejected(self):
+        f = dense(m=8, n=8, k=8, epilogue="relu")
+        sch = Schedule(f, seed=0)
+        with pytest.raises(ScheduleError):
+            sch.reverse_compute_inline(sch.get_block("relu"))
+
+    def test_cache_read_write(self):
+        f = gmm(n=16, m=16, k=16)
+        ins = random_inputs(f, 5)
+        sch = Schedule(f, seed=0)
+        b = sch.get_block("C")
+        sch.cache_read(b, "A", scope="vmem")
+        sch.cache_write(b, scope="vmem")
+        i, j, k = sch.get_loops(sch.get_block("C"))
+        sch.vectorize(j)
+        _check_semantics(sch, ins, {"C": ins["A"] @ ins["B"]})
+
+    def test_tensorize_mxu(self):
+        f = gmm(n=16, m=16, k=16)
+        ins = random_inputs(f, 6)
+        sch = Schedule(f, seed=0)
+        b = sch.get_block("C")
+        i, j, k = sch.get_loops(b)
+        sch.unroll(i)
+        sch.unroll(k)
+        sch.vectorize(j)
+        sch.tensorize_mxu(b)
+        _check_semantics(sch, ins, {"C": ins["A"] @ ins["B"]})
+
+    def test_tensorize_rejects_non_matmul(self):
+        f = sfm(m=8, n=8)
+        sch = Schedule(f, seed=0)
+        with pytest.raises(ScheduleError):
+            sch.tensorize_mxu(sch.get_block("expv"))
+
+
+class TestTrace:
+    def _tiled_gmm(self, seed=0):
+        f = gmm(n=16, m=16, k=16)
+        sch = Schedule(f, seed=seed)
+        b = sch.get_block("C")
+        i, j, k = sch.get_loops(b)
+        ti = sch.sample_perfect_tile(i, 2, 16)
+        tj = sch.sample_perfect_tile(j, 2, 16)
+        i0, i1 = sch.split(i, ti)
+        j0, j1 = sch.split(j, tj)
+        sch.reorder(i0, j0, i1, j1)
+        sch.unroll(i1)
+        sch.vectorize(j1)
+        return f, sch
+
+    def test_replay_reproduces_script(self):
+        f, sch = self._tiled_gmm()
+        sch2 = Schedule(f, seed=99)
+        sch.trace.replay(sch2)
+        assert sch2.script() == sch.script()
+
+    def test_json_roundtrip(self):
+        f, sch = self._tiled_gmm()
+        t = Trace.from_json(sch.trace.to_json())
+        sch2 = Schedule(f, seed=1)
+        t.replay(sch2)
+        assert sch2.script() == sch.script()
+
+    def test_decision_mutation_rebinds_downstream(self):
+        f, sch = self._tiled_gmm()
+        idx = sch.trace.sampling_indices()[0]
+        t2 = sch.trace.with_decision(idx, [16, 1])
+        sch2 = Schedule(f, seed=2)
+        t2.replay(sch2)
+        assert sch2.script() != sch.script()
+        ins = random_inputs(f, 0)
+        _check_semantics(sch2, ins, {"C": ins["A"] @ ins["B"]})
+
+    def test_out_of_support_decision_raises(self):
+        f, sch = self._tiled_gmm()
+        idx = sch.trace.sampling_indices()[0]
+        t2 = sch.trace.with_decision(idx, [5, 5])  # 25 != 16
+        sch2 = Schedule(f, seed=3)
+        with pytest.raises(ScheduleError):
+            t2.replay(sch2)
+
+    def test_as_python_renders(self):
+        _, sch = self._tiled_gmm()
+        script = sch.trace.as_python()
+        assert "sample_perfect_tile" in script
+        assert "decision=" in script

@@ -1,0 +1,105 @@
+"""IR semantics: reference evaluator vs direct numpy + LinExpr properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads as W
+from repro.core.tir import (
+    LinExpr,
+    Term,
+    evaluate_primfunc,
+    random_inputs,
+)
+
+
+class TestWorkloadSemantics:
+    def test_gmm_matches_numpy(self):
+        f = W.gmm(n=8, m=12, k=16)
+        ins = random_inputs(f, 0)
+        out = evaluate_primfunc(f, ins)["C"]
+        np.testing.assert_allclose(out, ins["A"] @ ins["B"], rtol=1e-5)
+
+    def test_dense_epilogues(self):
+        for ep, post in [
+            ("bias_relu", lambda y, b: np.maximum(y + b, 0)),
+            ("bias", lambda y, b: y + b),
+            ("softcap", lambda y, b: 30 * np.tanh(y / 30)),
+        ]:
+            f = W.dense(m=8, n=8, k=8, epilogue=ep)
+            ins = random_inputs(f, 1)
+            out = evaluate_primfunc(f, ins)[f.outputs[0].name]
+            y = ins["X"] @ ins["W"]
+            b = ins.get("bias", 0.0)
+            np.testing.assert_allclose(out, post(y, b), rtol=1e-4, atol=1e-5)
+
+    def test_softmax(self):
+        f = W.sfm(m=8, n=16)
+        ins = random_inputs(f, 2)
+        out = evaluate_primfunc(f, ins)["Y"]
+        A = ins["A"]
+        ref = np.exp(A - A.max(1, keepdims=True))
+        ref /= ref.sum(1, keepdims=True)
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+    def test_depthwise_conv(self):
+        f = W.dep(h=8, w=8, c=3)
+        ins = random_inputs(f, 3)
+        out = evaluate_primfunc(f, ins)["Y"]
+        X, Wt = ins["X"], ins["W"]
+        Xp = np.pad(X, ((0, 0), (1, 1), (1, 1)))
+        ref = np.zeros_like(out)
+        for c in range(3):
+            for i in range(8):
+                for j in range(8):
+                    ref[c, i, j] = (Xp[c, i: i + 3, j: j + 3] * Wt[c]).sum()
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("name", W.PAPER_OPERATORS)
+    def test_all_reduced_workloads_finite(self, name):
+        f = W.get_workload(name, **W.REDUCED_KWARGS.get(name, {}))
+        out = evaluate_primfunc(f, random_inputs(f, 7))
+        for v in out.values():
+            assert np.isfinite(v).all()
+
+
+class TestLinExpr:
+    @given(
+        st.lists(
+            st.tuples(st.sampled_from("abc"), st.integers(-5, 5)),
+            min_size=0,
+            max_size=4,
+        ),
+        st.integers(-10, 10),
+        st.dictionaries(st.sampled_from("abc"), st.integers(0, 7), min_size=3),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_evaluate_linear(self, terms, const, env):
+        e = LinExpr([Term(v, c) for v, c in terms], const)
+        expected = const + sum(c * env[v] for v, c in terms)
+        assert e.evaluate(env) == expected
+
+    @given(
+        st.integers(1, 64),
+        st.integers(1, 8),
+        st.integers(0, 63),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_divmod_term(self, div, mod, val):
+        e = LinExpr([Term("x", 3, div, mod)], 1)
+        assert e.evaluate({"x": val}) == 1 + 3 * ((val // div) % mod)
+
+    @given(st.dictionaries(st.sampled_from("ab"), st.integers(1, 9), min_size=2))
+    @settings(max_examples=30, deadline=None)
+    def test_bounds_contain_all_values(self, extents):
+        e = LinExpr([Term("a", 2), Term("b", -3)], 5)
+        lo, hi = e.bounds(extents)
+        for av in range(extents["a"]):
+            for bv in range(extents["b"]):
+                v = e.evaluate({"a": av, "b": bv})
+                assert lo <= v <= hi
+
+    def test_substitute(self):
+        e = LinExpr.var("x") * 4 + 3
+        sub = e.substitute({"x": LinExpr.var("y") * 2 + 1})
+        assert sub.evaluate({"y": 5}) == 4 * (2 * 5 + 1) + 3
