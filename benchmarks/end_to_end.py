@@ -51,6 +51,10 @@ def extract_tasks(cfg) -> List[TuneTask]:
 
 def run(db_path: str = "results/tuning_db.json", csv: bool = True) -> List[Dict]:
     trials = int(os.environ.get("REPRO_BENCH_TRIALS", "24"))
+    # measurement backend for the tuning loop, from the runner registry
+    # ("local", "pool", "cached+pool", ...); reference timings below stay
+    # on the serial in-process runner either way for comparability
+    runner_spec = os.environ.get("REPRO_RUNNER", "cached+pool")
     rounds = 3 * max(trials // 8, 3)  # per-task budget matters here
     out = []
     runner = LocalRunner()
@@ -65,9 +69,10 @@ def run(db_path: str = "results/tuning_db.json", csv: bool = True) -> List[Dict]
                 max_trials=trials, init_random=8, population=12,
                 measure_per_round=8,
             ),
-            runner=runner,
+            runner=runner_spec,
         )
         best = sched.tune(total_rounds=rounds)
+        sched.runner.close()
         # layer-weighted aggregate: tuned vs the canonical DEFAULT schedule
         # (first valid space sample) — the search's contribution, as in
         # operators.py; XLA-native oracle shown for context only

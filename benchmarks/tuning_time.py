@@ -1,13 +1,22 @@
-"""Table 1: tuning time.  Wall-clock per trial and trials/sec of the
-search loop across representative workloads (the paper compares
-MetaSchedule vs Ansor minutes at equal trial budgets)."""
+"""Table 1: tuning time.  Wall-clock per trial of the search loop across
+representative workloads (the paper compares MetaSchedule vs Ansor
+minutes at equal trial budgets).
+
+This driver additionally compares measurement backends from the runner
+registry at an equal trial count — by default the serial in-process
+``local`` runner vs ``cached+pool`` (process-pool parallel measurement
+behind a trace-hash cache) — and reports the wall-clock speedup and the
+cache-hit rate.  ``--smoke`` runs a single tiny workload for CI.
+"""
 
 from __future__ import annotations
 
+import argparse
 import os
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 from repro.search.evolutionary import SearchConfig
+from repro.search.measure import create_runner
 from repro.search.tune import tune_workload
 
 WORKLOADS = [
@@ -16,30 +25,92 @@ WORKLOADS = [
     ("sfm", dict(m=256, n=256), False),
 ]
 
+SMOKE_WORKLOADS = [("gmm", dict(n=64, m=64, k=64), False)]
 
-def run(csv: bool = True) -> List[Dict]:
-    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "16"))
+DEFAULT_RUNNERS = ("local", "cached+pool")
+
+
+def run(
+    csv: bool = True,
+    smoke: bool = False,
+    runner_specs: Sequence[str] = DEFAULT_RUNNERS,
+) -> List[Dict]:
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "6" if smoke else "16"))
+    workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
     cfg = SearchConfig(
         max_trials=trials, init_random=max(trials // 4, 4),
         population=max(trials // 2, 8), measure_per_round=max(trials // 4, 4),
     )
     out = []
-    for name, kwargs, mxu in WORKLOADS:
-        res = tune_workload(name, kwargs, use_mxu=mxu, config=cfg)
-        row = {
-            "workload": name,
-            "trials": res.trials,
-            "tuning_s": res.tuning_time_s,
-            "s_per_trial": res.tuning_time_s / max(res.trials, 1),
-        }
-        out.append(row)
-        if csv:
-            print(
-                f"tuning_time/{name},{row['s_per_trial']*1e6:.0f},"
-                f"trials={row['trials']};total_s={row['tuning_s']:.1f}"
-            )
+    # one runner instance per spec, shared across workloads — the same
+    # lifetime TaskScheduler gives it, so pool startup amortizes and the
+    # cache can dedup across rounds
+    runners = {spec: create_runner(spec) for spec in runner_specs}
+    prev_stats: Dict[str, tuple] = {}
+    try:
+        _run_workloads(workloads, runner_specs, runners, cfg, prev_stats, out, csv)
+    finally:
+        for r in runners.values():
+            r.close()
     return out
 
 
+def _run_workloads(workloads, runner_specs, runners, cfg, prev_stats, out, csv):
+    for name, kwargs, mxu in workloads:
+        per_runner: Dict[str, Dict] = {}
+        for spec in runner_specs:
+            res = tune_workload(
+                name, kwargs, use_mxu=mxu, config=cfg, runner=runners[spec]
+            )
+            # stats() is cumulative over the runner's life: report deltas
+            prev = prev_stats.setdefault(spec, (0, 0))
+            hits = res.cache_hits - prev[0]
+            misses = res.cache_misses - prev[1]
+            prev_stats[spec] = (res.cache_hits, res.cache_misses)
+            hit_rate = hits / max(hits + misses, 1)
+            row = {
+                "workload": name,
+                "runner": spec,
+                "trials": res.trials,
+                "tuning_s": res.tuning_time_s,
+                "s_per_trial": res.tuning_time_s / max(res.trials, 1),
+                "best_us": res.best_latency_s * 1e6,
+                "failures": res.measure_failures,
+                "cache_hits": hits,
+                "cache_misses": misses,
+                "cache_hit_rate": hit_rate,
+            }
+            per_runner[spec] = row
+            out.append(row)
+            if csv:
+                print(
+                    f"tuning_time/{name}/{spec},{row['s_per_trial']*1e6:.0f},"
+                    f"trials={row['trials']};total_s={row['tuning_s']:.1f};"
+                    f"failures={row['failures']};cache_hit_rate={hit_rate:.2f}"
+                )
+        if csv and len(per_runner) >= 2:
+            specs = list(per_runner)
+            base, cand = per_runner[specs[0]], per_runner[specs[-1]]
+            speedup = base["tuning_s"] / max(cand["tuning_s"], 1e-9)
+            print(
+                f"tuning_time/{name}/speedup,{speedup:.2f},"
+                f"{specs[0]}_s={base['tuning_s']:.1f};{specs[-1]}_s={cand['tuning_s']:.1f}"
+            )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="single tiny workload + small trial budget (CI)",
+    )
+    ap.add_argument(
+        "--runners", default=",".join(DEFAULT_RUNNERS),
+        help="comma-separated runner registry specs to compare",
+    )
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, runner_specs=[s for s in args.runners.split(",") if s])
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -154,7 +154,14 @@ class Trace:
     # -- serialization --------------------------------------------------------
 
     def to_json(self) -> str:
+        # ids come from an independent counter, NOT len(rv_ids): an
+        # instruction may re-output an RV equal to an earlier output
+        # (e.g. get_loops after split returns the same loop vars), which
+        # re-keys the dict without growing it — deriving ids from its
+        # length would then hand the same id to two different outputs and
+        # alias every downstream reference.
         rv_ids: Dict[RV, int] = {}
+        next_id = [0]
         out = []
 
         def enc(x):
@@ -181,7 +188,8 @@ class Trace:
             }
             rec["inputs"] = [enc(x) for x in it.inputs]
             for o in it.outputs:
-                oid = len(rv_ids)
+                oid = next_id[0]
+                next_id[0] += 1
                 rv_ids[o] = oid
                 kind = {"BlockRV": "block", "LoopRV": "loop", "ExprRV": "expr"}[
                     type(o).__name__

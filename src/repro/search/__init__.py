@@ -1,2 +1,10 @@
 from .tune import tune_workload, TuneResult  # noqa: F401
 from .database import Database  # noqa: F401
+from .measure import (  # noqa: F401
+    CachedRunner,
+    ProcessPoolRunner,
+    Runner,
+    as_runner,
+    create_runner,
+    runner_names,
+)

@@ -62,10 +62,35 @@ class Database:
     # -- API ----------------------------------------------------------------
 
     def put(self, rec: TuningRecord) -> None:
+        """Insert a record, keeping the best ``top_k`` per workload.
+
+        Records for an identical trace are deduplicated: the lower-latency
+        measurement wins and its meta (build/run provenance) is kept,
+        augmented with a re-measurement count — so repeated bests from a
+        caching runner never crowd the top-k with copies of one schedule.
+        """
         rows = self.records.setdefault(rec.workload_key, [])
-        rows.append(rec)
+        for i, old in enumerate(rows):
+            if old.trace_json == rec.trace_json:
+                keep, drop = (rec, old) if rec.latency_s <= old.latency_s else (old, rec)
+                n_seen = max(old.meta.get("times_measured", 1), 1) + 1
+                keep.meta = {**drop.meta, **keep.meta, "times_measured": n_seen}
+                rows[i] = keep
+                break
+        else:
+            rows.append(rec)
         rows.sort(key=lambda r: r.latency_s)
         del rows[self.top_k:]
+        self.save()
+
+    def put_batch(self, recs: List[TuningRecord]) -> None:
+        """Insert many records with a single save at the end."""
+        path, self.path = self.path, None
+        try:
+            for r in recs:
+                self.put(r)
+        finally:
+            self.path = path
         self.save()
 
     def best(self, workload_key: str) -> Optional[TuningRecord]:

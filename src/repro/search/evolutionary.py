@@ -30,7 +30,7 @@ from ..core.validator import validate_trace
 from .cost_model import GBDTCostModel
 from .database import Database, TuningRecord
 from .features import extract_features
-from .runner import LocalRunner
+from .measure import MeasureInput, as_runner, structural_hash
 
 
 @dataclass
@@ -59,7 +59,7 @@ class EvolutionarySearch:
         self,
         func: PrimFunc,
         space: SpaceGenerator,
-        runner: Optional[LocalRunner] = None,
+        runner=None,  # Runner | legacy LocalRunner | registry spec str | None
         database: Optional[Database] = None,
         workload_key: str = "",
         config: Optional[SearchConfig] = None,
@@ -68,7 +68,7 @@ class EvolutionarySearch:
     ):
         self.func = func
         self.space = space
-        self.runner = runner or LocalRunner()
+        self.runner = as_runner(runner)
         self.db = database
         self.key = workload_key or func.name
         self.cfg = config or SearchConfig()
@@ -76,17 +76,36 @@ class EvolutionarySearch:
         self.rng = np.random.default_rng(self.cfg.seed)
         self.verbose = verbose
         # measured state
-        self.measured: Dict[str, float] = {}  # decisions-key -> latency
+        self.measured: Dict[str, float] = {}  # structural hash -> latency
         self.best_latency = float("inf")
         self.best_trace: Optional[Trace] = None
         self.history: List[Tuple[int, float]] = []  # (trial, best so far)
+        self.failure_counts: List[int] = []  # failed measurements per round
+        self.errors: List[Tuple[str, str]] = []  # (structural hash, error)
         self._X: List[np.ndarray] = []
         self._lat: List[float] = []
 
     # -- helpers --------------------------------------------------------------
 
     def _dkey(self, trace: Trace) -> str:
-        return str(sorted(trace.decisions().items(), key=lambda kv: kv[0]))
+        return structural_hash(self.key, trace)
+
+    @property
+    def total_failures(self) -> int:
+        return sum(self.failure_counts)
+
+    def _provenance(self, res) -> Dict:
+        """Build/run provenance persisted into ``TuningRecord.meta``."""
+        return {
+            "func": self.func.name,
+            "runner": getattr(self.runner, "name", type(self.runner).__name__),
+            "build_time_s": round(res.build_time_s, 6),
+            "run_time_s": round(res.run_time_s, 6),
+            "source": res.source,
+            "trials_so_far": len(self.measured),
+            "failures_so_far": len(self.errors),
+            "recent_errors": [e for _, e in self.errors[-3:]],
+        }
 
     def _validated(self, trace: Trace) -> Optional[Candidate]:
         res = validate_trace(self.func, trace)
@@ -171,10 +190,21 @@ class EvolutionarySearch:
         return out[:k]
 
     def _measure(self, cands: List[Candidate]) -> None:
-        for c in cands:
-            res = self.runner.measure(c.schedule)
+        """Measure one round as a single batched request to the runner
+        (parallel runners overlap builds/timings across workers; results
+        come back in candidate order regardless)."""
+        if not cands:
+            return
+        batch = [
+            MeasureInput(self.key, self.func, c.trace, schedule=c.schedule)
+            for c in cands
+        ]
+        results = self.runner.run(batch)
+        round_failures = 0
+        for c, res in zip(cands, results):
             lat = res.latency_s
-            self.measured[self._dkey(c.trace)] = lat
+            h = self._dkey(c.trace)
+            self.measured[h] = lat
             if res.ok:
                 self._X.append(c.features)
                 self._lat.append(lat)
@@ -188,10 +218,20 @@ class EvolutionarySearch:
                                 c.trace.to_json(),
                                 lat,
                                 time.time(),
-                                {"func": self.func.name},
+                                self._provenance(res),
                             )
                         )
+            else:
+                round_failures += 1
+                self.errors.append((h, res.error))
             self.history.append((len(self.measured), self.best_latency))
+        self.failure_counts.append(round_failures)
+        if round_failures and self.verbose:
+            print(
+                f"[{self.key}] round {len(self.failure_counts)}: "
+                f"{round_failures}/{len(cands)} measurements failed "
+                f"(last: {self.errors[-1][1]})"
+            )
         # retrain the model on normalized throughput scores
         if self._lat:
             best = min(self._lat)

@@ -1,0 +1,25 @@
+"""Measurement subsystem: builder/runner split, parallel execution, caching.
+
+See :mod:`protocol` for the interface contract, :mod:`registry` for
+selecting a backend by name (``"local"``, ``"pool"``, ``"cached+pool"``).
+"""
+
+from .cached import CachedRunner  # noqa: F401
+from .hashing import structural_hash  # noqa: F401
+from .local import LocalBuilder, LocalRunner  # noqa: F401
+from .pool import ProcessPoolRunner  # noqa: F401
+from .protocol import (  # noqa: F401
+    Builder,
+    BuildResult,
+    LegacyRunnerAdapter,
+    MeasureInput,
+    MeasureResult,
+    Runner,
+)
+from .registry import (  # noqa: F401
+    as_runner,
+    create_runner,
+    register_runner,
+    register_wrapper,
+    runner_names,
+)

@@ -1,0 +1,86 @@
+"""Canonical structural hashing of (workload_key, trace).
+
+The evolutionary search mutates sampling decisions, and distinct mutation
+paths frequently converge on the same program: identical instruction
+sequence, identical decisions.  A canonical hash of the pair
+``(workload_key, trace)`` lets the measurement cache and the crash
+quarantine recognize such duplicates without comparing traces pairwise.
+
+``Trace.to_json`` is already a canonical positional encoding: random
+variables are numbered in definition order, untraced query inputs are
+name-resolved, and ``ExprRV`` uids (which differ between equal traces)
+never appear.  So two traces that replay to the same schedule serialize
+to the same JSON, and hashing that string is both canonical and cheap.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import weakref
+from typing import Any, Dict
+
+import numpy as np
+
+from ...core.trace import Trace
+
+# hash memo keyed by trace identity: the search hashes the same trace in
+# several places per round (measured-filter, cache, quarantine, provenance)
+# and serializing it each time is pure waste.  Identity keying is safe for
+# traces that are fully built before first being hashed — which holds for
+# every trace the search produces (mutation returns fresh Trace objects).
+_HASH_MEMO: "weakref.WeakKeyDictionary[Trace, Dict[str, str]]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
+def _jsonable(x: Any) -> Any:
+    """Normalize numpy scalars/arrays hiding inside decisions."""
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return [_jsonable(v) for v in x.tolist()]
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    return x
+
+
+def trace_canonical_json(trace: Trace) -> str:
+    """Canonical JSON of a trace (decision values normalized)."""
+    try:
+        return trace.to_json()
+    except TypeError:
+        # decisions containing numpy scalars: normalize and retry
+        fixed = Trace(
+            [
+                type(it)(it.name, it.inputs, it.attrs, it.outputs, _jsonable(it.decision))
+                for it in trace.insts
+            ]
+        )
+        return fixed.to_json()
+
+
+def structural_hash(workload_key: str, trace: Trace) -> str:
+    """Stable 16-hex-digit digest of (workload_key, trace structure+decisions)."""
+    try:
+        per_trace = _HASH_MEMO.setdefault(trace, {})
+    except TypeError:  # un-weakref-able trace subclass: just don't memoize
+        per_trace = {}
+    h = per_trace.get(workload_key)
+    if h is None:
+        payload = workload_key + "\x00" + trace_canonical_json(trace)
+        h = hashlib.sha256(payload.encode("utf-8")).hexdigest()[:16]
+        per_trace[workload_key] = h
+    return h
+
+
+def decisions_digest(trace: Trace) -> str:
+    """Digest of the sampling decisions alone (debug/provenance aid)."""
+    dec = _jsonable(trace.decisions())
+    return hashlib.sha256(
+        json.dumps(dec, sort_keys=True, default=str).encode("utf-8")
+    ).hexdigest()[:12]

@@ -1,0 +1,136 @@
+"""In-process Builder and Runner (serial reference implementation).
+
+``LocalBuilder`` lowers each candidate through the jnp backend and jits
+it; ``LocalRunner`` times the artifacts.  The split matters even locally:
+the builder's output is reusable (e.g. for correctness checks) and the
+timing loop is identical for every in-process runner.  Process-parallel
+measurement lives in :mod:`pool`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from ...backends import jnp_backend
+from ...core.tir import PrimFunc, random_inputs
+from ...core.validator import validate_trace
+from .protocol import Builder, BuildResult, MeasureInput, MeasureResult, Runner
+
+
+class LocalBuilder(Builder):
+    """Lower + jit each candidate in the current process."""
+
+    name = "local"
+
+    def build(self, inputs: List[MeasureInput]) -> List[BuildResult]:
+        out: List[BuildResult] = []
+        for mi in inputs:
+            t0 = time.perf_counter()
+            try:
+                sch = mi.schedule
+                if sch is None:
+                    v = validate_trace(mi.func, mi.trace)
+                    if not v.ok:
+                        out.append(BuildResult(error=f"invalid trace: {v.reason}"))
+                        continue
+                    sch = v.schedule
+                lowered = jnp_backend.build(sch)
+                fn = jax.jit(lowered.fn)
+                out.append(
+                    BuildResult(artifact=fn, build_time_s=time.perf_counter() - t0)
+                )
+            except Exception as e:  # lowering failure -> rejection, not crash
+                out.append(
+                    BuildResult(
+                        error=f"{type(e).__name__}: {e}",
+                        build_time_s=time.perf_counter() - t0,
+                    )
+                )
+        return out
+
+
+def time_artifact(
+    fn,
+    ins,
+    repeats: int,
+    warmup: int,
+    timeout_s: float,
+) -> MeasureResult:
+    """Shared timing loop: first call (compile) with timeout check, then
+    warmup, then the median of ``repeats`` timed runs."""
+    try:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(ins))
+        first = time.perf_counter() - t0
+        if first > timeout_s:
+            # source stays "measured": this IS a completed measurement (the
+            # schedule is too slow) and may be cached; source="timeout" is
+            # reserved for pool batch-budget expiry, where the candidate may
+            # never have run and must not be cached
+            return MeasureResult(
+                float("inf"), f"timeout (first call took {first:.2f}s)"
+            )
+        for _ in range(warmup):
+            jax.block_until_ready(fn(ins))
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(ins))
+            times.append(time.perf_counter() - t0)
+        return MeasureResult(float(np.median(times)), run_time_s=float(sum(times)))
+    except Exception as e:  # runtime failure -> rejection
+        return MeasureResult(float("inf"), f"{type(e).__name__}: {e}")
+
+
+class LocalRunner(Runner):
+    """Serial in-process measurement through a ``LocalBuilder``."""
+
+    name = "local"
+
+    def __init__(self, repeats: int = 3, warmup: int = 1, timeout_s: float = 10.0):
+        self.repeats = repeats
+        self.warmup = warmup
+        self.timeout_s = timeout_s
+        self.builder = LocalBuilder()
+        self._inputs_cache: Dict[str, Dict] = {}
+        self.n_measured = 0
+        self.n_failed = 0
+
+    def _inputs(self, func: PrimFunc):
+        key = func.name + str(tuple(b.shape for b in func.inputs))
+        if key not in self._inputs_cache:
+            self._inputs_cache[key] = {
+                k: jax.device_put(v) for k, v in random_inputs(func, 0).items()
+            }
+        return self._inputs_cache[key]
+
+    def run(self, inputs: List[MeasureInput]) -> List[MeasureResult]:
+        built = self.builder.build(inputs)
+        out: List[MeasureResult] = []
+        for mi, br in zip(inputs, built):
+            if not br.ok:
+                self.n_failed += 1
+                out.append(
+                    MeasureResult(float("inf"), br.error, build_time_s=br.build_time_s)
+                )
+                continue
+            res = time_artifact(
+                br.artifact,
+                self._inputs(mi.func),
+                self.repeats,
+                self.warmup,
+                self.timeout_s,
+            )
+            res.build_time_s = br.build_time_s
+            self.n_measured += 1
+            if not res.ok:
+                self.n_failed += 1
+            out.append(res)
+        return out
+
+    def stats(self):
+        return {"measured": self.n_measured, "failed": self.n_failed}

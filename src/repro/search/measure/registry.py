@@ -1,0 +1,105 @@
+"""Runner registry: measurement backends selectable by name.
+
+Specs compose with ``+``: the rightmost part names a base runner, parts
+to its left name wrappers applied outside-in.  Built-ins::
+
+    "local"        in-process serial (reference)
+    "pool"         process-pool parallel with timeouts + quarantine
+    "cached+local" trace-hash cache over the serial runner
+    "cached+pool"  trace-hash cache over the pool (recommended default
+                   for tuning runs)
+
+Plugging in a new backend (e.g. a future remote/TPU runner)::
+
+    @register_runner("tpu-remote")
+    def _make(**kw):
+        return MyRemoteRunner(**kw)
+
+after which ``tune_workload(..., runner="cached+tpu-remote")`` works.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .cached import CachedRunner
+from .local import LocalRunner
+from .pool import ProcessPoolRunner
+from .protocol import LegacyRunnerAdapter, Runner
+
+_RUNNERS: Dict[str, Callable[..., Runner]] = {}
+_WRAPPERS: Dict[str, Callable[..., Runner]] = {}
+
+
+def register_runner(name: str):
+    def deco(factory: Callable[..., Runner]):
+        _RUNNERS[name] = factory
+        return factory
+
+    return deco
+
+
+def register_wrapper(name: str):
+    def deco(factory: Callable[..., Runner]):
+        _WRAPPERS[name] = factory
+        return factory
+
+    return deco
+
+
+@register_runner("local")
+def _make_local(**kw) -> Runner:
+    return LocalRunner(**kw)
+
+
+@register_runner("pool")
+def _make_pool(**kw) -> Runner:
+    r = ProcessPoolRunner(**kw)
+    r.warm()  # overlap worker spawn + jax import with the caller's own work
+    return r
+
+
+@register_wrapper("cached")
+def _make_cached(inner: Runner, **kw) -> Runner:
+    return CachedRunner(inner, **kw)
+
+
+def runner_names() -> list:
+    bases = sorted(_RUNNERS)
+    return bases + [f"{w}+{b}" for w in sorted(_WRAPPERS) for b in bases]
+
+
+def create_runner(spec: str, **kwargs) -> Runner:
+    """Instantiate a runner from a ``[wrapper+]*base`` spec string.
+
+    ``kwargs`` go to the base runner's factory.
+    """
+    parts = spec.split("+")
+    base_name = parts[-1]
+    if base_name not in _RUNNERS:
+        raise KeyError(
+            f"unknown runner {base_name!r}; available: {', '.join(runner_names())}"
+        )
+    runner = _RUNNERS[base_name](**kwargs)
+    for w in reversed(parts[:-1]):
+        if w not in _WRAPPERS:
+            raise KeyError(
+                f"unknown runner wrapper {w!r}; available: {', '.join(sorted(_WRAPPERS))}"
+            )
+        runner = _WRAPPERS[w](runner)
+    return runner
+
+
+def as_runner(obj) -> Runner:
+    """Normalize anything runner-like to the batch ``Runner`` protocol:
+    ``None`` -> default LocalRunner, str -> registry spec, Runner -> itself,
+    legacy ``.measure()`` objects -> adapter."""
+    if obj is None:
+        return LocalRunner()
+    if isinstance(obj, str):
+        return create_runner(obj)
+    if isinstance(obj, Runner):
+        return obj
+    if hasattr(obj, "measure"):
+        return LegacyRunnerAdapter(obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a Runner")

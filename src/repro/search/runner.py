@@ -1,10 +1,17 @@
-"""Measurement runner: f(e) — wall-clock latency of a lowered schedule.
+"""Legacy serial measurement runner: f(e) — wall-clock latency of a
+lowered schedule.
 
 Builds the jnp lowering, jits, and times it on this host.  Guards against
 pathological schedules (the validator's iteration cap is a first line;
 the runner adds wall-clock timeouts and returns ``inf`` on failure, which
 the search treats as rejection — mirroring real autotuners' timeout
 semantics).
+
+The search stack now talks to the batch protocol in
+:mod:`repro.search.measure` (builder/runner split, process-pool parallel
+measurement, trace-hash caching); this module remains as the in-process
+reference path — ``measure.as_runner`` adapts it transparently — and as
+the home of ``baseline()`` (XLA-native oracle timing) used by reports.
 """
 
 from __future__ import annotations

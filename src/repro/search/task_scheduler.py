@@ -20,7 +20,7 @@ from ..core.modules import Module, SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
 from .database import Database, workload_key
 from .evolutionary import EvolutionarySearch, SearchConfig
-from .runner import LocalRunner
+from .measure import as_runner
 
 
 @dataclass
@@ -37,12 +37,14 @@ class TaskScheduler:
         tasks: Sequence[TuneTask],
         database: Optional[Database] = None,
         config: Optional[SearchConfig] = None,
-        runner: Optional[LocalRunner] = None,
+        runner=None,  # registry spec str, measure.Runner, or legacy LocalRunner
         verbose: bool = False,
     ):
         self.tasks = list(tasks)
         self.db = database
-        self.runner = runner or LocalRunner()
+        # one shared runner across tasks: a caching runner then dedups
+        # identical candidates across sibling tasks with equal shapes
+        self.runner = as_runner(runner)
         cfg = config or SearchConfig()
         self.verbose = verbose
         self.searches: List[EvolutionarySearch] = []

@@ -21,6 +21,7 @@ from ..core.validator import validate_trace
 from ..core.workloads import WORKLOADS, get_workload
 from .database import Database, TuningRecord, workload_key
 from .evolutionary import EvolutionarySearch, SearchConfig
+from .measure import MeasureInput, Runner, as_runner
 from .runner import LocalRunner
 
 
@@ -34,6 +35,11 @@ class TuneResult:
     best_trace: Trace
     history: list
     tuning_time_s: float = 0.0
+    runner_name: str = "local"
+    measure_failures: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    runner_stats: Optional[Dict] = None
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -52,7 +58,8 @@ def tune_workload(
     use_mxu: bool = False,
     config: Optional[SearchConfig] = None,
     database: Optional[Database] = None,
-    runner: Optional[LocalRunner] = None,
+    runner=None,  # registry spec str ("local", "pool", "cached+pool"),
+                  # a measure.Runner, or a legacy LocalRunner
     verbose: bool = False,
 ) -> TuneResult:
     import time
@@ -61,7 +68,7 @@ def tune_workload(
     func = get_workload(name, **shape_kwargs)
     key = workload_key(name, **shape_kwargs)
     space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
-    runner = runner or LocalRunner()
+    runner = as_runner(runner)
     t0 = time.perf_counter()
     search = EvolutionarySearch(
         func,
@@ -73,17 +80,24 @@ def tune_workload(
         verbose=verbose,
     ).tune()
     dt = time.perf_counter() - t0
-    baseline = runner.baseline(func)
-    # canonical untuned point: first valid sample of the space (seed 0..)
-    from ..core.validator import validate_trace
-
+    if search.best_trace is not None:
+        # re-verify the winner through the same runner: with a caching
+        # runner this is a guaranteed dedup hit, not a re-measurement.
+        # Outside the timed window — for non-caching runners it is a full
+        # measurement and would bias cross-runner tuning-time comparisons.
+        runner.run([MeasureInput(key, func, search.best_trace)])
+    # baseline + canonical untuned point are reference measurements, taken
+    # serially in-process so they are comparable across runner backends
+    serial = LocalRunner()
+    baseline = serial.baseline(func)
     default_lat = float("nan")
     for s0 in range(16):
         sch0 = space.generate(func, seed=s0)
         v = validate_trace(func, sch0.trace)
         if v.ok:
-            default_lat = runner.measure(v.schedule).latency_s
+            default_lat = serial.measure(v.schedule).latency_s
             break
+    stats = runner.stats()
     return TuneResult(
         workload_key=key,
         best_latency_s=search.best_latency,
@@ -93,6 +107,11 @@ def tune_workload(
         best_trace=search.best_trace,
         history=search.history,
         tuning_time_s=dt,
+        runner_name=getattr(runner, "name", type(runner).__name__),
+        measure_failures=search.total_failures,
+        cache_hits=int(stats.get("cache_hits", 0)),
+        cache_misses=int(stats.get("cache_misses", 0)),
+        runner_stats=stats,
     )
 
 

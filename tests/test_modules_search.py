@@ -142,8 +142,12 @@ class TestSearch:
     def test_database_topk_and_persistence(self, tmp_path):
         p = str(tmp_path / "db.json")
         db = Database(p, top_k=2)
-        for lat in [3.0, 1.0, 2.0]:
-            db.put(TuningRecord("k1", "[]", lat))
+        # distinct traces: records for an identical trace are deduplicated
+        for i, lat in enumerate([3.0, 1.0, 2.0]):
+            db.put(TuningRecord("k1", f'[{{"t": {i}}}]', lat))
         assert [r.latency_s for r in db.top("k1", 5)] == [1.0, 2.0]
         db2 = Database(p)
         assert db2.best("k1").latency_s == 1.0
+        # re-measuring the same trace keeps one (best) record
+        db.put(TuningRecord("k1", '[{"t": 1}]', 1.5))
+        assert [r.latency_s for r in db.top("k1", 5)] == [1.0, 2.0]

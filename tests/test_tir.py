@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import workloads as W
