@@ -8,33 +8,11 @@ import argparse
 import tempfile
 
 from repro.configs.base import get_config
-from repro.search.database import Database, workload_key
-from repro.search.task_scheduler import TaskScheduler, TuneTask
+from repro.search.database import Database
+from repro.search.task_scheduler import TaskScheduler
 from repro.search.evolutionary import SearchConfig
-from repro.core.workloads import dense
+from repro.integration import extract_tasks
 from repro.launch import train as train_launcher
-
-
-def extract_tasks(cfg):
-    """The model's per-layer projections, as MetaSchedule dense workloads
-    (token dim fixed at a representative 128)."""
-    tasks = []
-    D, H, hd, F = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
-    shapes = {
-        "qkv": (128, H * hd, D),
-        "ffn_in": (128, F, D),
-        "ffn_out": (128, D, F),
-    }
-    for name, (m, n, k) in shapes.items():
-        tasks.append(
-            TuneTask(
-                key=workload_key("dense", k=k, m=m, n=n),
-                func=dense(m=m, n=n, k=k),
-                weight=cfg.n_layers,
-                use_mxu=True,
-            )
-        )
-    return tasks
 
 
 def main():
@@ -47,8 +25,11 @@ def main():
     db = Database("/tmp/tune_and_train_db.json")
 
     print("== phase 1: tune the model's tensor programs (task scheduler) ==")
+    # tasks extracted automatically from the model's forward jaxpr —
+    # shapes, occurrence weights and dedup all come from the program
     sched = TaskScheduler(
-        extract_tasks(cfg), database=db,
+        extract_tasks(cfg, batch=1, seq=128, dispatchable_only=True),
+        database=db,
         config=SearchConfig(max_trials=24, init_random=6, population=8,
                             measure_per_round=6),
         verbose=True,

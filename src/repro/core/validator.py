@@ -84,3 +84,20 @@ def validate_schedule(sch: Schedule) -> ValidationResult:
             False, None, f"vmem {vmem} > {MAX_VMEM_BYTES}", iters, max_tile, vmem
         )
     return ValidationResult(True, sch, "", iters, max_tile, vmem)
+
+
+def first_valid_schedule(func: PrimFunc, space, seed_scan: int = 8):
+    """The canonical *untuned* schedule of a workload: the first valid
+    sample from ``space`` over a fixed seed scan.
+
+    Single source of truth for the default-schedule baseline — the task
+    scheduler's warm-start, the dispatch layer's ``mode="default"``
+    context, and ``tune_workload``'s ``default_latency_s`` all call this,
+    so "untuned" means the same program everywhere.  Returns a Schedule
+    or None if the scan produces no valid sample.
+    """
+    for seed in range(seed_scan):
+        v = validate_trace(func, space.generate(func, seed=seed).trace)
+        if v.ok:
+            return v.schedule
+    return None

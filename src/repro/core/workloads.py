@@ -701,6 +701,42 @@ def relu(m: int = 1024, n: int = 1024, dtype: str = "float32") -> PrimFunc:
     return PrimFunc("relu", (A,), (B,), (blk,))
 
 
+@register("rmsnorm")
+def rmsnorm(
+    tokens: int = 128, d: int = 768, eps: float = 1e-6, dtype: str = "float32"
+) -> PrimFunc:
+    """RMS norm over the last axis — the model-integration norm workload.
+
+    Y[i, j] = X[i, j] * rsqrt(mean_j(X[i, :]^2) + eps) * W[j]
+    """
+    X = Buffer("X", (tokens, d), dtype)
+    W = Buffer("W", (d,), dtype)
+    S = Buffer("S", (tokens,), dtype)
+    Y = Buffer("Y", (tokens, d), dtype)
+    sumsq = Block(
+        name="sumsq",
+        axes=(Axis("i", tokens), Axis("j", d, REDUCE)),
+        expr=mul(load(X, "i", "j"), load(X, "i", "j")),
+        write=S,
+        write_indices=(_v("i"),),
+        reduce_op="add",
+    )
+    scale = Block(
+        name="scale",
+        axes=(Axis("i", tokens), Axis("j", d)),
+        expr=mul(
+            mul(
+                load(X, "i", "j"),
+                UnOp("rsqrt", add(mul(load(S, "i"), const(1.0 / d)), const(eps))),
+            ),
+            load(W, "j"),
+        ),
+        write=Y,
+        write_indices=(_v("i"), _v("j")),
+    )
+    return PrimFunc("rmsnorm", (X, W), (Y,), (sumsq, scale))
+
+
 @register("fused_dense")
 def fused_dense(
     m: int = 128, n: int = 3072, k: int = 768, dtype: str = "float32"
@@ -743,4 +779,5 @@ REDUCED_KWARGS: Dict[str, Dict] = {
     "dense": dict(m=32, n=32, k=32),
     "batch_matmul": dict(b=2, m=16, n=16, k=16),
     "fused_dense": dict(m=32, n=64, k=32),
+    "rmsnorm": dict(tokens=16, d=32),
 }

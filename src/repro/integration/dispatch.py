@@ -1,0 +1,286 @@
+"""Tuned-kernel dispatch: swap database-backed traces into model forward.
+
+``DispatchContext`` is the consumer side of the end-to-end loop: given a
+tuning :class:`~repro.search.database.Database`, it looks up the best
+record per workload key, replays the stored trace through the validator,
+lowers the schedule with the jnp backend, jits it once, and serves the
+compiled callable to the model layers — which call in through the hooks
+in :mod:`repro.models.layers` (``dense_op`` / ``rmsnorm``) while the
+context is active::
+
+    db = Database("results/tuning_db.json")
+    with DispatchContext(db, tasks=extract_tasks(cfg)) as ctx:
+        logits = jax.jit(lambda p, t: forward(cfg, p, tokens=t))(params, toks)
+    print(ctx.stats)   # {"hits": ..., "misses": ...}
+
+Fallback is transparent: no database record, an invalid stored trace, or
+a shape the context has never seen all return ``None`` from the lookup
+and the layer keeps its jnp reference path.  Lookups happen at *trace
+time* (shapes are static under jit), so a dispatched forward bakes the
+tuned kernels into its jaxpr and pays zero per-call dispatch cost.
+
+Gradients: tuned kernels are forward-optimized, so each swapped call is
+wrapped in ``jax.custom_vjp`` whose backward is the VJP of the jnp
+reference op — training under a context differentiates correctly without
+requiring the lowered loop nest to be reverse-differentiable.
+
+``mode="default"`` compiles the *first valid space sample* per workload
+instead of the database best: the canonical untuned schedule, used as the
+measured untuned baseline in ``benchmarks/end_to_end.py``.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..backends import jnp_backend
+from ..core.modules import SpaceGenerator, default_modules
+from ..core.tir import PrimFunc
+from ..core.validator import first_valid_schedule, validate_trace
+from ..search.database import Database, parse_workload_key, workload_key
+
+# active-context stack; layers read the top via current().  Thread-local so
+# parallel serving threads with different contexts don't cross-dispatch.
+_TLS = threading.local()
+
+
+def current() -> Optional["DispatchContext"]:
+    """The innermost active DispatchContext, or None."""
+    stack = getattr(_TLS, "stack", None)
+    return stack[-1] if stack else None
+
+
+@dataclass
+class CompiledKernel:
+    """A lowered, jitted workload ready to swap into the model."""
+
+    key: str
+    func: PrimFunc
+    fn: Callable  # callable(dict inputs) -> dict outputs (jitted)
+    out_name: str
+    source: str  # "database" | "default"
+    latency_s: float = float("inf")
+    grad_fn: Optional[Callable] = None  # custom_vjp-wrapped positional call
+
+
+class DispatchContext:
+    """Looks up best traces by workload key and serves compiled kernels.
+
+    Parameters
+    ----------
+    database:
+        A ``Database`` instance or a path to one.  Optional in
+        ``mode="default"``.
+    tasks:
+        Optional iterable of ``TuneTask`` (or anything with ``.key`` and
+        ``.func``) naming the workloads this context may dispatch.  When
+        omitted, every parseable key in the database becomes dispatchable.
+    mode:
+        ``"best"`` (default): compile the best database record per key;
+        keys without a record miss and fall back.  ``"default"``: compile
+        the first valid space sample per key — the untuned baseline.
+    """
+
+    def __init__(
+        self,
+        database: Optional[Any] = None,
+        tasks: Optional[Sequence[Any]] = None,
+        mode: str = "best",
+        use_mxu: bool = True,
+        default_seed_scan: int = 8,
+    ):
+        if mode not in ("best", "default"):
+            raise ValueError(f"unknown dispatch mode {mode!r}")
+        self.db: Optional[Database] = (
+            Database(database) if isinstance(database, str) else database
+        )
+        self.mode = mode
+        self.use_mxu = use_mxu
+        self.default_seed_scan = default_seed_scan
+        self.stats: Dict[str, int] = {"hits": 0, "misses": 0}
+        self._funcs: Dict[str, PrimFunc] = {}
+        self._task_mxu: Dict[str, bool] = {}
+        self._compiled: Dict[str, Optional[CompiledKernel]] = {}
+        if tasks is not None:
+            for t in tasks:
+                self._funcs[t.key] = t.func
+                self._task_mxu[t.key] = getattr(t, "use_mxu", False)
+        elif self.db is not None:
+            from ..core.workloads import WORKLOADS, get_workload
+
+            for key in self.db.keys():
+                try:
+                    name, kw = parse_workload_key(key)
+                    if name in WORKLOADS:
+                        self._funcs[key] = get_workload(name, **kw)
+                except Exception:
+                    continue  # foreign key (e.g. operator-bench workload)
+
+    # -- context management -------------------------------------------------
+
+    def __enter__(self) -> "DispatchContext":
+        stack = getattr(_TLS, "stack", None)
+        if stack is None:
+            stack = _TLS.stack = []
+        stack.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _TLS.stack.pop()
+
+    # -- compilation --------------------------------------------------------
+
+    def keys(self) -> List[str]:
+        return list(self._funcs.keys())
+
+    def tuned_keys(self) -> List[str]:
+        """Keys for which the database holds at least one record."""
+        if self.db is None:
+            return []
+        return [k for k in self._funcs if self.db.best(k) is not None]
+
+    def _schedule_for(self, key: str, func: PrimFunc):
+        """(schedule, source, latency) for a key, or None."""
+        if self.mode == "best":
+            if self.db is None:
+                return None
+            rec = self.db.best(key)
+            if rec is None:
+                return None
+            v = validate_trace(func, rec.trace())
+            if not v.ok:
+                return None
+            return v.schedule, "database", rec.latency_s
+        # mode == "default": the canonical untuned schedule.  Use the
+        # task's own space configuration when known so this is the exact
+        # program the scheduler's warm-start seeded the search with.
+        if key in self._task_mxu:
+            mxu = self._task_mxu[key]
+        else:
+            name, _ = parse_workload_key(key)
+            mxu = self.use_mxu and name in ("dense", "batch_matmul", "gmm")
+        space = SpaceGenerator(default_modules(use_mxu=mxu))
+        sch = first_valid_schedule(func, space, self.default_seed_scan)
+        if sch is None:
+            return None
+        return sch, "default", float("inf")
+
+    def kernel(self, key: str) -> Optional[CompiledKernel]:
+        """Compiled kernel for ``key`` (lazy; None caches the miss)."""
+        if key in self._compiled:
+            return self._compiled[key]
+        func = self._funcs.get(key)
+        kern: Optional[CompiledKernel] = None
+        if func is not None:
+            got = self._schedule_for(key, func)
+            if got is not None:
+                sch, source, lat = got
+                lowered = jnp_backend.build(sch)
+                kern = CompiledKernel(
+                    key=key,
+                    func=func,
+                    fn=jax.jit(lowered.fn),
+                    out_name=func.outputs[0].name,
+                    source=source,
+                    latency_s=lat,
+                )
+        self._compiled[key] = kern
+        return kern
+
+    def warm(self, keys: Optional[Sequence[str]] = None) -> int:
+        """Eagerly compile kernels; returns how many are dispatchable."""
+        n = 0
+        for k in keys if keys is not None else self.keys():
+            n += self.kernel(k) is not None
+        return n
+
+    # -- op-level lookups (called from model layers at trace time) ---------
+
+    def _lookup(self, key: str) -> Optional[CompiledKernel]:
+        kern = self.kernel(key)
+        if kern is None:
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return kern
+
+    def dense(self, x: jnp.ndarray, w: jnp.ndarray) -> Optional[jnp.ndarray]:
+        """Tuned ``x @ w`` over the last dim of x; None -> caller falls back."""
+        if x.ndim < 1 or w.ndim != 2 or x.shape[-1] != w.shape[0]:
+            return None
+        m = 1
+        for s in x.shape[:-1]:
+            m *= int(s)
+        k, n = int(w.shape[0]), int(w.shape[1])
+        kern = self._lookup(workload_key("dense", m=m, n=n, k=k))
+        if kern is None:
+            return None
+        if kern.grad_fn is None:
+            def ref(x2, w2):
+                return jnp.einsum(
+                    "mk,kn->mn", x2, w2, preferred_element_type=jnp.float32
+                )
+
+            def fwd_kernel(x2, w2):
+                return kern.fn({"X": x2, "W": w2})[kern.out_name]
+
+            kern.grad_fn = _with_reference_grad(fwd_kernel, ref)
+        x2 = x.reshape(m, k).astype(jnp.float32)
+        out = kern.grad_fn(x2, w.astype(jnp.float32))
+        return out.reshape(*x.shape[:-1], n).astype(x.dtype)
+
+    def rmsnorm(
+        self, x: jnp.ndarray, w: jnp.ndarray, eps: float
+    ) -> Optional[jnp.ndarray]:
+        """Tuned RMS norm over the last axis; None -> caller falls back."""
+        if x.ndim < 1 or w.ndim != 1 or x.shape[-1] != w.shape[0]:
+            return None
+        tokens = 1
+        for s in x.shape[:-1]:
+            tokens *= int(s)
+        d = int(x.shape[-1])
+        kern = self._lookup(workload_key("rmsnorm", d=d, eps=eps, tokens=tokens))
+        if kern is None:
+            return None
+        if kern.grad_fn is None:
+            def ref(x2, w2):
+                var = jnp.mean(x2 * x2, axis=-1, keepdims=True)
+                return x2 * jax.lax.rsqrt(var + eps) * w2
+
+            def fwd_kernel(x2, w2):
+                return kern.fn({"X": x2, "W": w2})[kern.out_name]
+
+            kern.grad_fn = _with_reference_grad(fwd_kernel, ref)
+        x2 = x.reshape(tokens, d).astype(jnp.float32)
+        out = kern.grad_fn(x2, w.astype(jnp.float32))
+        return out.reshape(x.shape).astype(x.dtype)
+
+
+def _with_reference_grad(kernel_fn: Callable, ref_fn: Callable) -> Callable:
+    """Forward through the tuned kernel, backward through the reference VJP."""
+
+    @jax.custom_vjp
+    def f(*args):
+        return kernel_fn(*args)
+
+    def fwd(*args):
+        return kernel_fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def maybe_dispatch(ctx: Optional[DispatchContext]):
+    """``with maybe_dispatch(ctx):`` — no-op when ctx is None."""
+    from contextlib import nullcontext
+
+    return ctx if ctx is not None else nullcontext()

@@ -1,0 +1,315 @@
+"""Automatic task extraction from whole models (Ansor-style, end-to-end).
+
+Instead of hand-coding per-model hot shapes, we trace the model's forward
+pass with ``jax.make_jaxpr`` (abstract — no allocation, works at full
+model scale) and walk the jaxpr recursively, mapping primitive sites to
+registered tensor-program workloads in :mod:`repro.core.workloads`:
+
+* ``dot_general``  -> ``dense`` (no batch dims) or ``batch_matmul``
+  (leading spatial dims of the lhs/rhs fold into m/n; contraction dims
+  fold into k);
+* ``rsqrt``        -> ``rmsnorm`` over (tokens, d_model) — the model's
+  norms lower to exactly one ``rsqrt`` each;
+* ``exp``          -> ``sfm`` (row softmax) over the flattened operand —
+  the attention-softmax sites;
+* anything else    -> skipped.
+
+``scan`` bodies multiply site occurrence counts by the trip count, so a
+30-layer stacked-scan transformer yields weight-30 tasks rather than 30
+copies.  Tasks dedup by the *structural hash* of the instantiated
+workload PrimFunc (:func:`repro.search.measure.hashing.primfunc_structural_hash`),
+summing occurrence weights — the scheduler then allocates trials by those
+weights, and :class:`repro.integration.dispatch.DispatchContext` swaps the
+tuned traces back into the model by the same workload keys.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.workloads import get_workload
+from ..search.database import workload_key
+from ..search.measure.hashing import primfunc_structural_hash
+from ..search.task_scheduler import TuneTask
+
+TOKEN_TILE = 128  # default representative token block (batch=1 x seq=128)
+
+# ops the extractor understands; everything else is skipped
+EXTRACTABLE_OPS = ("dense", "batch_matmul", "rmsnorm", "sfm")
+
+
+@dataclass
+class TaskSite:
+    """One primitive site mapped to a workload, pre-dedup.
+
+    ``dispatchable`` marks sites whose memory layout the dispatch layer
+    can serve today (``x @ w`` with w stored (k, n); rmsnorm).  A
+    transposed-weight matmul (e.g. tied-embedding unembed, attention
+    score/value contractions) is still a legitimate *tuning* target but
+    cannot be swapped back into the model yet, so benchmarks that spend
+    trials only where they can cash them set ``dispatchable_only=True``.
+    """
+
+    op: str
+    kwargs: Dict[str, Any]
+    count: float  # occurrence count (scan trip counts folded in)
+    dispatchable: bool = False
+
+
+@dataclass
+class ExtractedTask:
+    """A deduplicated, weighted tuning task."""
+
+    key: str
+    op: str
+    kwargs: Dict[str, Any]
+    weight: float
+    struct_hash: str
+    flops: int
+    dispatchable: bool = False
+
+    def to_tune_task(self, use_mxu: bool = True) -> TuneTask:
+        func = get_workload(self.op, **self.kwargs)
+        mxu = use_mxu and self.op in ("dense", "batch_matmul")
+        return TuneTask(key=self.key, func=func, weight=self.weight, use_mxu=mxu)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[Any, int]]:
+    """(inner jaxpr, trip-count multiplier) pairs nested in an eqn."""
+    mult = 1
+    if eqn.primitive.name == "scan":
+        mult = int(eqn.params.get("length", 1))
+    out: List[Tuple[Any, int]] = []
+
+    def add(v):
+        if hasattr(v, "jaxpr") and hasattr(getattr(v, "jaxpr"), "eqns"):
+            out.append((v.jaxpr, mult))  # ClosedJaxpr
+        elif hasattr(v, "eqns"):
+            out.append((v, mult))  # open Jaxpr
+
+    for v in eqn.params.values():
+        add(v)
+        if isinstance(v, (tuple, list)):
+            for u in v:
+                add(u)
+    return out
+
+
+def _walk_eqns(jaxpr, mult: int, visit: Callable[[Any, int], None]) -> None:
+    for eqn in jaxpr.eqns:
+        visit(eqn, mult)
+        for sub, m2 in _sub_jaxprs(eqn):
+            _walk_eqns(sub, mult * m2, visit)
+
+
+def _prod(xs: Iterable[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _dot_site(eqn) -> Optional[TaskSite]:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    b = _prod(lhs[i] for i in lb)
+    k = _prod(lhs[i] for i in lc)
+    m = _prod(lhs[i] for i in range(len(lhs)) if i not in set(lb) | set(lc))
+    n = _prod(rhs[i] for i in range(len(rhs)) if i not in set(rb) | set(rc))
+    if min(m, n, k) < 1:
+        return None
+    if b > 1:
+        return TaskSite("batch_matmul", dict(b=b, m=m, n=n, k=k), 1.0)
+    # the dense dispatch hook serves x(..., k) @ w(k, n): lhs contracts its
+    # trailing dims, the 2-D rhs contracts dim 0.  Anything else (e.g. the
+    # tied-embedding unembed with w stored (n, k)) tunes but can't swap in.
+    disp = (
+        len(rhs) == 2
+        and tuple(rc) == (0,)
+        and tuple(lc) == tuple(range(len(lhs) - len(lc), len(lhs)))
+    )
+    return TaskSite("dense", dict(m=m, n=n, k=k), 1.0, dispatchable=disp)
+
+
+def _rsqrt_site(eqn, d_model: int, eps: float) -> Optional[TaskSite]:
+    if d_model <= 0:
+        return None
+    shape = eqn.invars[0].aval.shape
+    tokens = max(_prod(shape), 1)
+    # eps is part of the workload (baked into the PrimFunc expression) and
+    # of the key — it must match what the model passes at dispatch time
+    return TaskSite(
+        "rmsnorm", dict(tokens=tokens, d=d_model, eps=eps), 1.0, dispatchable=True
+    )
+
+
+def _exp_site(eqn) -> Optional[TaskSite]:
+    shape = eqn.invars[0].aval.shape
+    if len(shape) < 2 or shape[-1] < 2:
+        return None  # scalar / correction-factor exp, not a softmax row
+    return TaskSite("sfm", dict(m=_prod(shape[:-1]), n=int(shape[-1])), 1.0)
+
+
+def sites_from_jaxpr(
+    closed_jaxpr, d_model: int = 0, norm_eps: float = 1e-6
+) -> List[TaskSite]:
+    """All extractable primitive sites of a (closed) jaxpr, pre-dedup."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    sites: List[TaskSite] = []
+
+    def visit(eqn, mult):
+        name = eqn.primitive.name
+        site = None
+        if name == "dot_general":
+            site = _dot_site(eqn)
+        elif name == "rsqrt":
+            site = _rsqrt_site(eqn, d_model, norm_eps)
+        elif name == "exp":
+            site = _exp_site(eqn)
+        if site is not None:
+            site.count = float(mult)
+            sites.append(site)
+
+    _walk_eqns(jaxpr, 1, visit)
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# Dedup + weighting
+# ---------------------------------------------------------------------------
+
+
+def _task_flops(op: str, kw: Dict[str, Any]) -> int:
+    if op == "dense":
+        return 2 * kw["m"] * kw["n"] * kw["k"]
+    if op == "batch_matmul":
+        return 2 * kw["b"] * kw["m"] * kw["n"] * kw["k"]
+    if op == "rmsnorm":
+        return 4 * kw["tokens"] * kw["d"]
+    if op == "sfm":
+        return 8 * kw["m"] * kw["n"]
+    return 0
+
+
+def dedup_sites(
+    sites: Iterable[TaskSite], min_task_elems: int = 4096
+) -> List[ExtractedTask]:
+    """Collapse repeated shapes into weighted tasks (structural-hash dedup).
+
+    ``min_task_elems`` drops degenerate sites (e.g. the online-softmax
+    correction factor ``exp`` over an n=1 column) whose tuning could never
+    pay for itself.  A merged task's ``weight`` counts *all* structurally
+    identical sites and ``dispatchable`` is true if *any* of them can be
+    served — callers that must weight only servable occurrences (the
+    benchmark) filter sites before dedup via ``dispatchable_only``.
+    """
+    by_hash: Dict[str, ExtractedTask] = {}
+    for s in sites:
+        elems = _task_flops(s.op, s.kwargs) // 2
+        if elems < min_task_elems:
+            continue
+        func = get_workload(s.op, **s.kwargs)
+        h = primfunc_structural_hash(func)
+        if h in by_hash:
+            by_hash[h].weight += s.count
+            by_hash[h].dispatchable = by_hash[h].dispatchable or s.dispatchable
+        else:
+            by_hash[h] = ExtractedTask(
+                key=workload_key(s.op, **s.kwargs),
+                op=s.op,
+                kwargs=dict(s.kwargs),
+                weight=s.count,
+                struct_hash=h,
+                flops=_task_flops(s.op, s.kwargs),
+                dispatchable=s.dispatchable,
+            )
+    out = list(by_hash.values())
+    out.sort(key=lambda t: (-t.weight * t.flops, t.key))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry point
+# ---------------------------------------------------------------------------
+
+
+def model_forward_jaxpr(cfg: ModelConfig, batch: int = 1, seq: int = TOKEN_TILE):
+    """Abstractly trace ``models.transformer.forward`` for one config."""
+    from ..models import transformer as T
+    from ..models.registry import prefill_input_specs
+
+    params = T.param_specs(cfg)
+    shape = ShapeConfig("extract", seq, batch, "prefill")
+    inputs = prefill_input_specs(cfg, shape)
+    return jax.make_jaxpr(lambda p, ins: T.forward(cfg, p, **ins))(params, inputs)
+
+
+def extract_tasks(
+    cfg: ModelConfig,
+    batch: int = 1,
+    seq: int = TOKEN_TILE,
+    use_mxu: bool = True,
+    min_task_elems: int = 4096,
+    max_tasks: int = 0,
+    ops: Tuple[str, ...] = EXTRACTABLE_OPS,
+    dispatchable_only: bool = False,
+) -> List[TuneTask]:
+    """Extract weighted tuning tasks from a model config's forward pass.
+
+    Generic across every config in ``repro.configs`` — no per-model shape
+    tables.  ``max_tasks > 0`` keeps only the top tasks by
+    weight x flops (the end-to-end-dominant ones); ``dispatchable_only``
+    further restricts to sites the dispatch layer can swap back into the
+    model — together these are what the CPU benchmark uses to spend its
+    trial budget only where it can cash it.
+    """
+    extracted = extract_task_specs(
+        cfg, batch=batch, seq=seq, min_task_elems=min_task_elems,
+        max_tasks=max_tasks, ops=ops, dispatchable_only=dispatchable_only,
+    )
+    return [t.to_tune_task(use_mxu=use_mxu) for t in extracted]
+
+
+def extract_task_specs(
+    cfg: ModelConfig,
+    batch: int = 1,
+    seq: int = TOKEN_TILE,
+    min_task_elems: int = 4096,
+    max_tasks: int = 0,
+    ops: Tuple[str, ...] = EXTRACTABLE_OPS,
+    dispatchable_only: bool = False,
+) -> List[ExtractedTask]:
+    """Like :func:`extract_tasks` but returns the rich task records."""
+    jaxpr = model_forward_jaxpr(cfg, batch=batch, seq=seq)
+    sites = [
+        s
+        for s in sites_from_jaxpr(
+            jaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps
+        )
+        if s.op in ops
+    ]
+    if dispatchable_only:
+        sites = [s for s in sites if s.dispatchable]
+    tasks = dedup_sites(sites, min_task_elems=min_task_elems)
+    if max_tasks > 0 and len(tasks) > max_tasks:
+        dropped = tasks[max_tasks:]
+        tasks = tasks[:max_tasks]
+        # no silent caps: record what fell off the end
+        import logging
+
+        logging.getLogger(__name__).info(
+            "extract_tasks(%s): kept %d tasks, dropped %d (%s)",
+            cfg.name, len(tasks), len(dropped),
+            ", ".join(d.key for d in dropped),
+        )
+    return tasks

@@ -11,6 +11,7 @@ TPU-native counterpart.
 from __future__ import annotations
 
 import math
+import sys
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
@@ -20,6 +21,38 @@ import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Tuned-kernel dispatch hook
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_ctx():
+    """Active ``repro.integration.dispatch.DispatchContext``, or None.
+
+    Read through ``sys.modules`` instead of an import: a context can only
+    be active if the integration module is already imported, and this
+    keeps the model layers import-light and cycle-free.
+    """
+    mod = sys.modules.get("repro.integration.dispatch")
+    return mod.current() if mod is not None else None
+
+
+def dense_op(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Last-dim contraction ``x @ w`` — the tuned-kernel dispatch point.
+
+    Under an active DispatchContext whose database holds a tuned trace for
+    this (m, n, k), the search's best schedule executes here; otherwise
+    (no context, no record, shape mismatch) the jnp reference runs.
+    Dispatch resolves at trace time: shapes are static under jit.
+    """
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        out = ctx.dense(x, w)
+        if out is not None:
+            return out
+    return jnp.einsum("...d,df->...f", x, w)
 
 # logical-axis registry: path-pattern -> axes tuple, filled by init fns.
 # (simpler than threading metadata through every pytree leaf)
@@ -46,6 +79,11 @@ def rmsnorm_init(d: int, name: str) -> jnp.ndarray:
 
 
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        out = ctx.rmsnorm(x, w, eps)
+        if out is not None:
+            return out
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
@@ -240,9 +278,9 @@ def attention_init(rng, cfg, prefix: str) -> Dict:
 def qkv_proj(p: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, ...]:
     B, S, _ = x.shape
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
-    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
-    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    q = dense_op(x, p["wq"])
+    k = dense_op(x, p["wk"])
+    v = dense_op(x, p["wv"])
     if "bq" in p:
         q = q + p["bq"].astype(q.dtype)
         k = k + p["bk"].astype(k.dtype)
@@ -273,13 +311,13 @@ def mlp_init(rng, d_model: int, d_ff: int, prefix: str, gated: bool = True) -> D
 
 
 def mlp(p: Dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
-    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    h = dense_op(x, p["wi"])
     actf = {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[act]
     if "wg" in p:
-        h = actf(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+        h = actf(dense_op(x, p["wg"])) * h
     else:
         h = actf(h)
-    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return dense_op(h, p["wo"])
 
 
 def moe_init(rng, cfg, prefix: str) -> Dict:

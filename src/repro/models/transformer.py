@@ -157,7 +157,7 @@ def _attn_full(cfg, p, x, pos, window, chunk=1024):
         chunk=min(chunk, S),
     )
     out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
-    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+    return L.dense_op(out, p["wo"]), (k, v)
 
 
 def _layer_fwd(
@@ -214,7 +214,7 @@ def _encoder(cfg: ModelConfig, params, frames):
         k = _rope_q(cfg, k, pos)
         o = L.chunked_attention(q, k, v, causal=False, chunk=min(1024, F))
         o = o.transpose(0, 2, 1, 3).reshape(B, F, cfg.n_heads * cfg.head_dim)
-        carry = carry + jnp.einsum("bsh,hd->bsd", o, p["attn"]["wo"])
+        carry = carry + L.dense_op(o, p["attn"]["wo"])
         h2 = L.rmsnorm(carry, p["ln2"], cfg.norm_eps)
         carry = carry + L.mlp(p["mlp"], h2, cfg.act)
         return carry, None
@@ -237,7 +237,7 @@ def _cross_attn(cfg, p, x, enc_out):
     ).transpose(0, 2, 1, 3)
     o = L.chunked_attention(q, k, v, causal=False, chunk=min(1024, F))
     o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
-    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
+    return L.dense_op(o, p["wo"]), (k, v)
 
 
 def forward(
@@ -453,7 +453,7 @@ def decode_step(
                 softcap=cfg.attn_softcap,
             )
             a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
-            a = jnp.einsum("bsh,hd->bsd", a, p["attn"]["wo"])
+            a = L.dense_op(a, p["attn"]["wo"])
             if cfg.post_norms:
                 a = L.rmsnorm(a, p["post_ln1"], cfg.norm_eps)
             mix = mix + a
@@ -471,7 +471,7 @@ def decode_step(
                 q, sc["xk"], sc["xv"], length=jnp.asarray(cfg.enc_frames)
             )
             a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
-            x = x + jnp.einsum("bsh,hd->bsd", a, p["xattn"]["wo"])
+            x = x + L.dense_op(a, p["xattn"]["wo"])
         if cfg.d_ff:
             h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
             f = jnp.zeros_like(x)

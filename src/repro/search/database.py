@@ -13,7 +13,7 @@ import os
 import tempfile
 import time
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from ..core.trace import Trace
 
@@ -53,11 +53,18 @@ class Database:
         d = os.path.dirname(os.path.abspath(self.path)) or "."
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(
-                {k: [asdict(r) for r in v] for k, v in self.records.items()}, f
-            )
-        os.replace(tmp, self.path)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(
+                    {k: [asdict(r) for r in v] for k, v in self.records.items()},
+                    f,
+                )
+            os.replace(tmp, self.path)
+        finally:
+            # serialization failure: drop the temp file, leave the last
+            # complete database on disk untouched
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     # -- API ----------------------------------------------------------------
 
@@ -107,3 +114,24 @@ class Database:
 def workload_key(name: str, **shape_kwargs) -> str:
     parts = [name] + [f"{k}={v}" for k, v in sorted(shape_kwargs.items())]
     return "/".join(parts)
+
+
+def parse_workload_key(key: str) -> Tuple[str, Dict]:
+    """Inverse of :func:`workload_key`: ``"dense/k=32/m=8"`` ->
+    ``("dense", {"k": 32, "m": 8})``.  Values parse as int, then float,
+    then stay strings (e.g. ``epilogue=bias_gelu``)."""
+    parts = key.split("/")
+    kwargs: Dict = {}
+    for p in parts[1:]:
+        if "=" not in p:
+            raise ValueError(f"malformed workload key segment {p!r} in {key!r}")
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                kwargs[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            kwargs[k] = v
+    return parts[0], kwargs

@@ -78,6 +78,70 @@ def structural_hash(workload_key: str, trace: Trace) -> str:
     return h
 
 
+def _encode_expr(e: Any) -> Any:
+    """Canonical nested-list encoding of a TIR scalar expression."""
+    from ...core.tir import BinOp, Const, IterVar, Load, Select, UnOp
+
+    if isinstance(e, Const):
+        return ["const", float(e.value)]
+    if isinstance(e, IterVar):
+        return ["iter", e.name]
+    if isinstance(e, Load):
+        return ["load", e.buffer.name, [repr(ix) for ix in e.indices]]
+    if isinstance(e, BinOp):
+        return ["bin", e.op, _encode_expr(e.a), _encode_expr(e.b)]
+    if isinstance(e, UnOp):
+        return ["un", e.op, _encode_expr(e.a)]
+    if isinstance(e, Select):
+        return [
+            "select",
+            [[repr(b), int(n)] for b, n in e.bounds],
+            _encode_expr(e.a),
+            _encode_expr(e.b),
+        ]
+    return ["?", repr(e)]
+
+
+def primfunc_canonical_json(func: Any) -> str:
+    """Canonical JSON of a PrimFunc's structure (buffers, axes, exprs).
+
+    Two workload instantiations hash equal iff they compute the same
+    program over the same shapes — the dedup key for task extraction
+    (repeated layer shapes collapse into one weighted task).
+    """
+    def buf(b):
+        return [b.name, list(int(s) for s in b.shape), b.dtype]
+
+    payload = {
+        "inputs": [buf(b) for b in func.inputs],
+        "outputs": [buf(b) for b in func.outputs],
+        "blocks": [
+            {
+                "name": blk.name,
+                "axes": [[a.name, int(a.extent), a.kind] for a in blk.axes],
+                "expr": _encode_expr(blk.expr),
+                "write": buf(blk.write),
+                "write_indices": [repr(ix) for ix in blk.write_indices],
+                "reduce_op": blk.reduce_op,
+                "init": float(blk.init),
+            }
+            for blk in func.blocks
+        ],
+    }
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def primfunc_structural_hash(func: Any) -> str:
+    """Stable 16-hex-digit digest of a PrimFunc's structure.
+
+    Deliberately ignores ``func.name`` so that e.g. ``dense`` and an
+    identically-shaped ``fused_dense`` with the same blocks dedup.
+    """
+    return hashlib.sha256(
+        primfunc_canonical_json(func).encode("utf-8")
+    ).hexdigest()[:16]
+
+
 def decisions_digest(trace: Trace) -> str:
     """Digest of the sampling decisions alone (debug/provenance aid)."""
     dec = _jsonable(trace.decisions())

@@ -32,6 +32,19 @@ class TuneTask:
 
 
 class TaskScheduler:
+    """Gradient task scheduler with round-robin warmup and early stopping.
+
+    Every task gets one initialization round *before* any gradient-based
+    selection (previously the all-``inf`` gradients of cold tasks made
+    ``argmax`` hammer task 0 to a plateau before task 1 ever started).
+    After warmup, rounds go to the task whose recent best-latency slope —
+    weighted by its extracted occurrence count — promises the largest
+    end-to-end gain; exact gradient ties break uniformly at random.  A
+    task that fails to improve for ``patience`` consecutive rounds is
+    considered plateaued and stops receiving trials; tuning ends early
+    once every task has plateaued.
+    """
+
     def __init__(
         self,
         tasks: Sequence[TuneTask],
@@ -39,6 +52,10 @@ class TaskScheduler:
         config: Optional[SearchConfig] = None,
         runner=None,  # registry spec str, measure.Runner, or legacy LocalRunner
         verbose: bool = False,
+        patience: int = 4,
+        rel_improvement: float = 1e-3,
+        seed: Optional[int] = None,
+        seed_defaults: bool = True,
     ):
         self.tasks = list(tasks)
         self.db = database
@@ -47,6 +64,10 @@ class TaskScheduler:
         self.runner = as_runner(runner)
         cfg = config or SearchConfig()
         self.verbose = verbose
+        self.patience = patience
+        self.rel_improvement = rel_improvement
+        self.seed_defaults = seed_defaults
+        self.rng = np.random.default_rng(seed if seed is not None else cfg.seed)
         self.searches: List[EvolutionarySearch] = []
         for t in self.tasks:
             space = SpaceGenerator(default_modules(use_mxu=t.use_mxu))
@@ -60,42 +81,94 @@ class TaskScheduler:
                     config=SearchConfig(**{**cfg.__dict__}),
                 )
             )
-        self._initialized = [False] * len(self.tasks)
+        n = len(self.tasks)
+        self._initialized = [False] * n
+        self._stale_rounds = [0] * n
+        self._best_seen = [float("inf")] * n
+        self.rounds_run = 0
 
     def _gradient(self, i: int) -> float:
         """Expected end-to-end gain of giving task i one more round."""
         s = self.searches[i]
         t = self.tasks[i]
+        if self._stale_rounds[i] >= self.patience:
+            return float("-inf")  # plateaued: stop allocating trials
         if not self._initialized[i] or not np.isfinite(s.best_latency):
             return float("inf")  # cold tasks first
         h = s.history
         if len(h) < 2:
             return float("inf")
-        # recent slope of best latency, weighted by task weight x latency
+        # recent slope of best latency, weighted by occurrence count x latency
         window = h[-8:]
         d = window[0][1] - window[-1][1]
         return t.weight * max(d, 0.0) + 1e-9 * t.weight * s.best_latency
 
+    def _pick_task(self) -> Optional[int]:
+        """Warmup round-robin over cold tasks, then randomized argmax."""
+        cold = [i for i in range(len(self.tasks)) if not self._initialized[i]]
+        if cold:
+            return cold[0]
+        g = np.array([self._gradient(i) for i in range(len(self.tasks))])
+        if not len(g) or np.all(np.isneginf(g)):
+            return None  # every task plateaued
+        ties = np.flatnonzero(g == g.max())
+        return int(self.rng.choice(ties))
+
+    def _default_candidate(self, i: int):
+        """The canonical untuned schedule — the same program
+        ``DispatchContext``'s ``mode="default"`` baseline compiles."""
+        from ..core.validator import first_valid_schedule
+
+        s = self.searches[i]
+        sch = first_valid_schedule(s.func, s.space)
+        return s._validated(sch.trace) if sch is not None else None
+
+    def _run_round(self, i: int) -> None:
+        s = self.searches[i]
+        if not self._initialized[i]:
+            init = s._sample_initial(s.cfg.init_random)
+            if self.seed_defaults:
+                # warm-start with the default schedule so the tuned best
+                # is never worse than the untuned baseline (and mutation
+                # can descend from it)
+                dflt = self._default_candidate(i)
+                if dflt is not None:
+                    dk = s._dkey(dflt.trace)
+                    init = [dflt] + [c for c in init if s._dkey(c.trace) != dk]
+            if init:
+                s._measure(init[: s.cfg.measure_per_round])
+            self._initialized[i] = True
+        else:
+            pool = s._sample_initial(s.cfg.population)
+            pool = s._evolve(pool)
+            picks = s._select_to_measure(pool, s.cfg.measure_per_round)
+            if picks:
+                s._measure(picks)
+        # plateau tracking: did this round improve the task's best?
+        prev = self._best_seen[i]
+        now = s.best_latency
+        if now < prev * (1.0 - self.rel_improvement) or (
+            np.isfinite(now) and not np.isfinite(prev)
+        ):
+            self._stale_rounds[i] = 0
+        else:
+            self._stale_rounds[i] += 1
+        self._best_seen[i] = min(prev, now)
+
     def tune(self, total_rounds: int = 16) -> Dict[str, float]:
         for r in range(total_rounds):
-            # pick task with max gradient
-            g = [self._gradient(i) for i in range(len(self.tasks))]
-            i = int(np.argmax(g))
-            s = self.searches[i]
-            if not self._initialized[i]:
-                init = s._sample_initial(s.cfg.init_random)
-                if init:
-                    s._measure(init[: s.cfg.measure_per_round])
-                self._initialized[i] = True
-            else:
-                pool = s._sample_initial(s.cfg.population)
-                pool = s._evolve(pool)
-                picks = s._select_to_measure(pool, s.cfg.measure_per_round)
-                if picks:
-                    s._measure(picks)
+            i = self._pick_task()
+            if i is None:
+                if self.verbose:
+                    print(f"round {r}: all tasks plateaued — stopping early")
+                break
+            self._run_round(i)
+            self.rounds_run += 1
             if self.verbose:
+                s = self.searches[i]
                 print(
                     f"round {r}: task={self.tasks[i].key} "
-                    f"best={s.best_latency*1e6:.1f}us"
+                    f"best={s.best_latency*1e6:.1f}us "
+                    f"stale={self._stale_rounds[i]}"
                 )
         return {t.key: s.best_latency for t, s in zip(self.tasks, self.searches)}

@@ -91,12 +91,11 @@ def tune_workload(
     serial = LocalRunner()
     baseline = serial.baseline(func)
     default_lat = float("nan")
-    for s0 in range(16):
-        sch0 = space.generate(func, seed=s0)
-        v = validate_trace(func, sch0.trace)
-        if v.ok:
-            default_lat = serial.measure(v.schedule).latency_s
-            break
+    from ..core.validator import first_valid_schedule
+
+    sch0 = first_valid_schedule(func, space, seed_scan=16)
+    if sch0 is not None:
+        default_lat = serial.measure(sch0).latency_s
     stats = runner.stats()
     return TuneResult(
         workload_key=key,

@@ -39,6 +39,7 @@ class ServingEngine:
         max_batch: int = 4,
         max_seq: int = 256,
         seed: int = 0,
+        dispatch=None,  # Optional[repro.integration.dispatch.DispatchContext]
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -46,10 +47,16 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.rng = np.random.default_rng(seed)
+        # tuned-kernel dispatch: the context must be active while jit
+        # *traces* prefill/decode (shapes are static then); per-engine
+        # lambdas keep the jit caches per-context.
+        self.dispatch = dispatch
         self._prefill = jax.jit(
             lambda p, c, toks: self.model.prefill(p, c, tokens=toks)
         )
-        self._decode = jax.jit(self.model.decode_step)
+        self._decode = jax.jit(
+            lambda p, c, toks: self.model.decode_step(p, c, toks)
+        )
         self._requests: List[Request] = []
         self.stats: Dict[str, float] = {
             "prefill_tokens": 0, "decode_steps": 0, "prefill_s": 0.0,
@@ -76,6 +83,11 @@ class ServingEngine:
             self._run_batch(self._requests[i: i + self.max_batch])
         return self._requests
 
+    def _dctx(self):
+        from ..integration.dispatch import maybe_dispatch
+
+        return maybe_dispatch(self.dispatch)
+
     def _run_batch(self, reqs: List[Request]) -> None:
         B = len(reqs)
         S = max(len(r.prompt) for r in reqs)
@@ -84,7 +96,8 @@ class ServingEngine:
             prompts[j, S - len(r.prompt):] = r.prompt  # left-pad
         cache = self.model.init_cache(B, max_seq=self.max_seq)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, cache, jnp.asarray(prompts))
+        with self._dctx():
+            logits, cache = self._prefill(self.params, cache, jnp.asarray(prompts))
         logits = np.asarray(logits.astype(jnp.float32))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += B * S
@@ -97,9 +110,10 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in reqs)
         t0 = time.perf_counter()
         for step in range(max_new - 1):
-            logits, cache = self._decode(
-                self.params, cache, jnp.asarray(nxt[:, None])
-            )
+            with self._dctx():
+                logits, cache = self._decode(
+                    self.params, cache, jnp.asarray(nxt[:, None])
+                )
             self.stats["decode_steps"] += 1
             la = np.asarray(logits[:, 0].astype(jnp.float32))
             nxt = np.array(

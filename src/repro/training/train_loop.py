@@ -25,13 +25,27 @@ def make_train_step(
     model: Model,
     opt_cfg: OptConfig,
     num_microbatches: int = 1,
+    dispatch=None,  # Optional[repro.integration.dispatch.DispatchContext]
 ) -> Callable:
+    """Build the jit-able train step.
+
+    ``dispatch``: an optional tuned-kernel DispatchContext.  It is entered
+    around the loss/grad computation so it is active when jit *traces* the
+    step; tuned kernels run forward, their gradients flow through the jnp
+    reference VJP (see ``integration.dispatch._with_reference_grad``).
+    """
+    def _dctx():
+        from ..integration.dispatch import maybe_dispatch
+
+        return maybe_dispatch(dispatch)
+
     def loss_fn(params, batch):
         return model.loss(params, batch)
 
     def train_step(params: PyTree, opt_state: PyTree, batch: Dict):
         if num_microbatches <= 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            with _dctx():
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         else:
             def split(x):
                 return x.reshape((num_microbatches, x.shape[0] // num_microbatches) + x.shape[1:])
@@ -40,7 +54,8 @@ def make_train_step(
 
             def acc_step(carry, mb):
                 g_acc, l_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                with _dctx():
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
                 return (g_acc, l_acc + l), None
 
