@@ -1,0 +1,106 @@
+"""CI benchmark regression gate over a fresh ``BENCH_end_to_end.json``.
+
+Fails (exit 1) if any model's tuned/untuned speedup drops below the
+floor — the search warm-starts from the untuned default schedule, so a
+tuned forward slower than untuned means dispatch or measurement broke,
+not that the search had an unlucky day.  ``--tolerance`` absorbs
+wall-clock noise in small CI smoke runs (forward timings are medians of
+a few repeats on shared runners).
+
+Optionally also asserts dispatch coverage: ``--require-dispatched-op
+batch_matmul`` fails unless at least one task of that op was actually
+served (the attention-contraction parity guarantee of the Pallas
+backend job).
+
+Usage::
+
+    python benchmarks/check_regression.py [BENCH_end_to_end.json]
+        [--min-speedup 1.0] [--tolerance 0.05]
+        [--require-dispatched-op batch_matmul]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_JSON = Path(__file__).resolve().parents[1] / "BENCH_end_to_end.json"
+
+
+def check(
+    path: Path,
+    min_speedup: float = 1.0,
+    tolerance: float = 0.05,
+    require_dispatched_op: str = "",
+) -> int:
+    payload = json.loads(Path(path).read_text())
+    models = payload.get("models", [])
+    if not models:
+        print(f"FAIL: {path} holds no model rows")
+        return 1
+    floor = min_speedup * (1.0 - tolerance)
+    failures = []
+    for row in models:
+        name = row.get("model", "?")
+        speedup = float(row.get("speedup", 0.0))
+        status = "ok" if speedup >= floor else "REGRESSION"
+        print(
+            f"{name}: speedup={speedup:.3f}x (floor {floor:.3f}x, "
+            f"backend={row.get('backend', payload.get('backend', '?'))}) "
+            f"[{status}]"
+        )
+        if speedup < floor:
+            failures.append(
+                f"{name}: tuned/untuned speedup {speedup:.3f}x < {floor:.3f}x"
+            )
+        if require_dispatched_op:
+            served = [
+                t for t in row.get("tasks", [])
+                if t.get("op") == require_dispatched_op and t.get("dispatched")
+            ]
+            present = [
+                t for t in row.get("tasks", [])
+                if t.get("op") == require_dispatched_op
+            ]
+            print(
+                f"{name}: {require_dispatched_op} tasks dispatched "
+                f"{len(served)}/{len(present)}"
+            )
+            if not served:
+                failures.append(
+                    f"{name}: no {require_dispatched_op!r} task was "
+                    f"dispatched (extracted: {len(present)})"
+                )
+    if failures:
+        print("FAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("benchmark gate passed")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("json_path", nargs="?", default=str(DEFAULT_JSON))
+    ap.add_argument("--min-speedup", type=float, default=1.0)
+    ap.add_argument(
+        "--tolerance", type=float, default=0.05,
+        help="relative wall-clock noise allowance on the floor",
+    )
+    ap.add_argument(
+        "--require-dispatched-op", default="",
+        help="fail unless >=1 task of this op was dispatched (e.g. "
+             "batch_matmul)",
+    )
+    args = ap.parse_args(argv)
+    return check(
+        Path(args.json_path),
+        min_speedup=args.min_speedup,
+        tolerance=args.tolerance,
+        require_dispatched_op=args.require_dispatched_op,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

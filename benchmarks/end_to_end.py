@@ -22,11 +22,20 @@ root, machine-readable for the CI artifact):
 * ``speedup``            — untuned / tuned: what the search bought,
   measured in wall-clock through the whole model.
 
+Candidates are measured *and* served through the same lowering backend
+(``REPRO_BACKEND`` / ``--backend``: ``jnp`` default, ``pallas`` for the
+Pallas kernels in interpret mode on CPU / compiled on TPU) — the
+measured artifact is the dispatched artifact, per-backend.
+
 Env knobs: ``REPRO_BENCH_TRIALS`` (per-task measurement budget, default
-24), ``REPRO_RUNNER`` (measurement backend spec, default ``cached+pool``),
+24), ``REPRO_RUNNER`` (measurement runner spec, default ``cached+pool``),
+``REPRO_BACKEND`` (lowering backend, default ``jnp``),
 ``REPRO_E2E_MODELS`` (comma list, default ``smollm-135m``),
-``REPRO_E2E_TASKS`` (task cap by weight x flops, default 5),
-``REPRO_E2E_SEQ`` (token tile, default 128).
+``REPRO_E2E_TASKS`` (task cap by weight x flops, default 6 — enough to
+cover both attention contractions), ``REPRO_E2E_SEQ`` (token tile,
+default 128), ``REPRO_TIMEOUT_S`` (per-candidate measurement timeout;
+CI smoke lowers it so pathological interpret-mode candidates get cut
+off early).
 """
 
 from __future__ import annotations
@@ -41,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends.registry import resolve_backend_spec
 from repro.configs.base import get_config
 from repro.integration.dispatch import DispatchContext
 from repro.integration.extract import extract_task_specs
@@ -77,10 +87,22 @@ def run(
     db_path: str = "results/tuning_db.json",
     csv: bool = True,
     json_path: Path = JSON_PATH,
+    backend: str = None,
 ) -> List[Dict]:
     trials = int(os.environ.get("REPRO_BENCH_TRIALS", "24"))
     runner_spec = os.environ.get("REPRO_RUNNER", "cached+pool")
-    max_tasks = int(os.environ.get("REPRO_E2E_TASKS", "5"))
+    backend = resolve_backend_spec(backend)
+    if backend != "jnp":
+        # per-backend database and report: best-trace selection must come
+        # from measurements taken through the backend that will serve
+        # them, and a pallas run must not clobber the committed jnp
+        # BENCH_end_to_end.json
+        root, ext = os.path.splitext(db_path)
+        db_path = f"{root}_{backend}{ext}"
+        json_path = json_path.with_name(
+            f"{json_path.stem}_{backend}{json_path.suffix}"
+        )
+    max_tasks = int(os.environ.get("REPRO_E2E_TASKS", "6"))
     seq = int(os.environ.get("REPRO_E2E_SEQ", "128"))
     repeats = int(os.environ.get("REPRO_E2E_REPEATS", "3"))
     rounds_per_task = max(trials // 8, 2)
@@ -89,16 +111,23 @@ def run(
         cfg = get_config(arch)
         # 1. extract weighted tasks from the real model config.  Only
         # dispatchable sites: trials spent on layouts the model can't
-        # consume yet (transposed unembed, attention contractions) would
-        # never show up in the measured forward.
+        # consume yet (e.g. the transposed unembed) would never show up in
+        # the measured forward.  The attention score/value contractions
+        # are dispatchable batch_matmul sites since the bmm_op hook.
         specs = extract_task_specs(
             cfg, batch=1, seq=seq, max_tasks=max_tasks, dispatchable_only=True
         )
         tasks = [s.to_tune_task(use_mxu=True) for s in specs]
         # 2. tune: warmup round-robin, then gradient allocation; round
-        # size scales down with small smoke budgets
+        # size scales down with small smoke budgets.  Candidates build
+        # through the selected lowering backend.
         per_round = min(8, max(trials, 1))
         db = Database(db_path)
+        from repro.search.measure import create_runner
+
+        runner_kwargs = {}
+        if os.environ.get("REPRO_TIMEOUT_S"):
+            runner_kwargs["timeout_s"] = float(os.environ["REPRO_TIMEOUT_S"])
         sched = TaskScheduler(
             tasks,
             database=db,
@@ -106,25 +135,41 @@ def run(
                 max_trials=trials, init_random=per_round, population=12,
                 measure_per_round=per_round,
             ),
-            runner=runner_spec,
+            runner=create_runner(runner_spec, backend=backend, **runner_kwargs),
+            backend=backend,
         )
         best = sched.tune(total_rounds=len(tasks) * rounds_per_task)
         sched.runner.close()
-        # 3. dispatch: measure real forward passes.  Untuned and tuned
-        # contexts cover the *same* key set (keys with a db record) so the
-        # comparison isolates what the search changed.
+        # 3. dispatch: measure real forward passes, serving the *same*
+        # backend-lowered artifacts the tuner measured.  Untuned and
+        # tuned contexts cover the same key set (keys whose stored trace
+        # compiles) so the comparison isolates what the search changed.
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         toks = jnp.asarray(
             np.random.default_rng(0).integers(0, cfg.vocab, (1, seq)),
             jnp.int32,
         )
-        tuned_ctx = DispatchContext(db, tasks=tasks, mode="best")
-        # cover exactly the keys whose stored trace actually compiles (a
-        # stale/corrupt record passes db.best() but fails validation; it
-        # must fall back in *both* contexts or the comparison skews)
+        tuned_ctx = DispatchContext(db, tasks=tasks, mode="best", backend=backend)
+        # cover exactly the keys that compile in *both* contexts: a
+        # stale/corrupt record passes db.best() but fails validation, and
+        # a default schedule can fail a backend's lowering (e.g. the
+        # Pallas grid cap) while the tuned one succeeds — either way the
+        # key must fall back in both contexts or the comparison skews
         covered = [t for t in tasks if tuned_ctx.kernel(t.key) is not None]
-        untuned_ctx = DispatchContext(db, tasks=covered, mode="default")
+        untuned_ctx = DispatchContext(
+            db, tasks=covered, mode="default", backend=backend
+        )
+        both = [t for t in covered if untuned_ctx.kernel(t.key) is not None]
+        if len(both) != len(covered):
+            covered = both
+            tuned_ctx = DispatchContext(
+                db, tasks=covered, mode="best", backend=backend
+            )
+            untuned_ctx = DispatchContext(
+                db, tasks=covered, mode="default", backend=backend
+            )
+        covered_keys = {t.key for t in covered}
         xla_ms, ref = _timed_forward(model, params, toks, None, repeats)
         untuned_ms, _ = _timed_forward(model, params, toks, untuned_ctx, repeats)
         tuned_ms, got = _timed_forward(model, params, toks, tuned_ctx, repeats)
@@ -135,9 +180,35 @@ def run(
             jnp.max(jnp.abs(got.astype(jnp.float32) - ref.astype(jnp.float32)))
         )
         ref_scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) or 1.0
+        # "dispatched" = the tuned kernel was actually looked up (hit) at
+        # forward trace time, not merely compiled — a hook that silently
+        # stops consulting the context must fail the coverage gate
+        task_rows = [
+            {
+                "key": s.key,
+                "op": s.op,
+                "weight": s.weight,
+                "flops": s.flops,
+                "dispatched": (
+                    s.key in covered_keys
+                    and tuned_ctx.hits_by_key.get(s.key, 0) > 0
+                ),
+                "best_latency_us": (
+                    round(best[s.key] * 1e6, 2)
+                    if np.isfinite(best[s.key])
+                    else None
+                ),
+            }
+            for s in specs
+        ]
+        attn_total = sum(1 for t in task_rows if t["op"] == "batch_matmul")
+        attn_disp = sum(
+            1 for t in task_rows if t["op"] == "batch_matmul" and t["dispatched"]
+        )
         row = {
             "model": arch,
             "seq": seq,
+            "backend": backend,
             "trials_per_task": trials,
             "rounds_run": sched.rounds_run,
             "untuned_forward_ms": round(untuned_ms, 3),
@@ -146,34 +217,27 @@ def run(
             "speedup": round(untuned_ms / tuned_ms, 3) if tuned_ms else 0.0,
             "dispatch_hits": hits,
             "dispatch_misses": misses,
+            "attention_contractions": attn_total,
+            "attention_contractions_dispatched": attn_disp,
             "numerics_max_abs_err": round(max_err, 6),
             "numerics_rel_err": round(max_err / ref_scale, 6),
-            "tasks": [
-                {
-                    "key": s.key,
-                    "weight": s.weight,
-                    "flops": s.flops,
-                    "best_latency_us": (
-                        round(best[s.key] * 1e6, 2)
-                        if np.isfinite(best[s.key])
-                        else None
-                    ),
-                }
-                for s in specs
-            ],
+            "tasks": task_rows,
         }
         out.append(row)
         if csv:
             print(
-                f"end_to_end/{arch},untuned={untuned_ms:.1f}ms,"
+                f"end_to_end/{arch},backend={backend},"
+                f"untuned={untuned_ms:.1f}ms,"
                 f"tuned={tuned_ms:.1f}ms,xla={xla_ms:.1f}ms,"
                 f"speedup={row['speedup']:.2f}x,"
                 f"hits={row['dispatch_hits']},"
+                f"attn_bmm_dispatched={attn_disp}/{attn_total},"
                 f"rel_err={row['numerics_rel_err']:.2e}"
             )
     payload = {
         "benchmark": "end_to_end",
         "runner": runner_spec,
+        "backend": backend,
         "models": out,
     }
     json_path.write_text(json.dumps(payload, indent=2) + "\n")
@@ -182,5 +246,19 @@ def run(
     return out
 
 
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--backend", default=None,
+        help="lowering-backend spec (jnp, pallas, ...); default "
+             "REPRO_BACKEND env or jnp",
+    )
+    ap.add_argument("--db", default="results/tuning_db.json")
+    args = ap.parse_args(argv)
+    run(db_path=args.db, backend=args.backend)
+
+
 if __name__ == "__main__":
-    run()
+    main()

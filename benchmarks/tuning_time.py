@@ -34,6 +34,7 @@ def run(
     csv: bool = True,
     smoke: bool = False,
     runner_specs: Sequence[str] = DEFAULT_RUNNERS,
+    backend: str = None,
 ) -> List[Dict]:
     trials = int(os.environ.get("REPRO_BENCH_TRIALS", "6" if smoke else "16"))
     workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
@@ -44,8 +45,11 @@ def run(
     out = []
     # one runner instance per spec, shared across workloads — the same
     # lifetime TaskScheduler gives it, so pool startup amortizes and the
-    # cache can dedup across rounds
-    runners = {spec: create_runner(spec) for spec in runner_specs}
+    # cache can dedup across rounds.  All build through the selected
+    # lowering backend (--backend / REPRO_BACKEND).
+    runners = {
+        spec: create_runner(spec, backend=backend) for spec in runner_specs
+    }
     prev_stats: Dict[str, tuple] = {}
     try:
         _run_workloads(workloads, runner_specs, runners, cfg, prev_stats, out, csv)
@@ -108,8 +112,17 @@ def main(argv=None):
         "--runners", default=",".join(DEFAULT_RUNNERS),
         help="comma-separated runner registry specs to compare",
     )
+    ap.add_argument(
+        "--backend", default=None,
+        help="lowering-backend spec (jnp, pallas, ...); default "
+             "REPRO_BACKEND env or jnp",
+    )
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, runner_specs=[s for s in args.runners.split(",") if s])
+    run(
+        smoke=args.smoke,
+        runner_specs=[s for s in args.runners.split(",") if s],
+        backend=args.backend,
+    )
 
 
 if __name__ == "__main__":

@@ -1,1 +1,10 @@
 from . import jnp_backend  # noqa: F401
+from .registry import (  # noqa: F401
+    Backend,
+    Lowered,
+    backend_names,
+    default_backend_spec,
+    get_backend,
+    register_backend,
+    resolve_backend_spec,
+)

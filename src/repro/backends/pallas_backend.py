@@ -1,23 +1,53 @@
-"""Lower a Use-MXU-scheduled matmul trace onto the Pallas kernel.
+"""Lower tuned schedules onto the Pallas kernels.
 
 The jnp backend measures schedules on CPU; *this* backend realizes the same
-tuned schedule on TPU: the (S2·S3) spatial tile extents and the R1 reduce
-tile of the tensorized block become the Pallas ``BlockSpec`` shapes
-(bm, bn, bk) of :mod:`repro.kernels.matmul`.  Inlined/attached elementwise
-consumers become the kernel's fused epilogue.  This is the concrete
-instantiation of "MetaSchedule constructs the space, the backend carries
-the decisions to hardware" (paper Fig 1 + Appendix A.6).
+tuned schedule as a Pallas kernel: the (S2·S3) spatial tile extents and the
+R1 reduce tile of the tensorized block become the Pallas ``BlockSpec``
+shapes (bm, bn, bk) of :mod:`repro.kernels.matmul` (dense and batched), and
+the row tile of a softmax schedule becomes the row-block of
+:mod:`repro.kernels.softmax`.  Inlined/attached elementwise consumers
+become the kernel's fused epilogue.  This is the concrete instantiation of
+"MetaSchedule constructs the space, the backend carries the decisions to
+hardware" (paper Fig 1 + Appendix A.6).
+
+Pallas needs exact tiling, so sampled tile extents are *snapped* to the
+nearest divisor of the problem shape at lower time.  Snapping is part of
+the lowering's provenance: every ``lower_*`` path returns a meta dict with
+both the sampled and the snapped blocks, which the measurement stack
+persists into ``TuningRecord.meta`` and the dispatch layer surfaces on
+``CompiledKernel.meta`` — the measured tile is never silently different
+from the recorded one.
+
+Workloads covered: ``dense_*`` (+fused epilogues), ``batch_matmul``,
+``sfm``; everything else falls back to the jnp structural lowering (see
+:class:`repro.backends.registry.PallasBackend`).  A fused flash-attention
+path (:func:`repro.kernels.flash_attention.flash_attention`) is exposed to
+the dispatch layer through ``PallasBackend.fused_attention``.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from ..core.schedule import BlockNode, LoopNode, Schedule, iter_nodes
-from ..core.tir import REDUCE, SPATIAL
+from ..core.tir import PrimFunc, REDUCE, SPATIAL
 from ..core.trace import BlockRV
+from ..kernels.matmul import DEFAULT_BLOCKS
+from ..kernels.softmax import DEFAULT_ROW_BLOCK
+
+# PrimFunc names this backend can lower natively (dense_* covers every
+# epilogue variant, incl. fused_dense which instantiates dense_bias_gelu)
+_LOWERABLE_PREFIXES = ("dense_",)
+_LOWERABLE_NAMES = ("batch_matmul", "sfm")
+
+
+def supports(func: PrimFunc) -> bool:
+    """True if this backend has a native Pallas lowering for ``func``."""
+    return func.name in _LOWERABLE_NAMES or func.name.startswith(
+        _LOWERABLE_PREFIXES
+    )
 
 
 def find_tensorized_block(sch: Schedule) -> Optional[BlockNode]:
@@ -31,27 +61,33 @@ def find_tensorized_block(sch: Schedule) -> Optional[BlockNode]:
     return None
 
 
-def extract_matmul_blocks(sch: Schedule) -> Optional[Tuple[int, int, int]]:
-    """(bm, bn, bk) from the tensorized block's tile structure."""
+def _per_axis_tile(sch: Schedule, bn_node: BlockNode) -> Dict[str, int]:
+    """Tile extent per block axis (product of tile loops feeding it)."""
     from .jnp_backend import _tile_suffix
 
+    blk = bn_node.block
+    _, path = sch._find_block(blk.name)
+    loops = [n for n in path if isinstance(n, LoopNode)]
+    tile = _tile_suffix(loops, bn_node)
+    per_axis: Dict[str, int] = {a.name: 1 for a in blk.axes}
+    for ln in tile:
+        for ax in blk.axes:
+            if ln.var in bn_node.bindings[ax.name].vars():
+                per_axis[ax.name] *= ln.extent
+    return per_axis
+
+
+def extract_matmul_blocks(sch: Schedule) -> Optional[Tuple[int, int, int]]:
+    """(bm, bn, bk) from the tensorized block's tile structure."""
     bn_node = find_tensorized_block(sch)
     if bn_node is None:
         return None
     blk = bn_node.block
     if len(blk.spatial_axes) < 2 or len(blk.reduce_axes) < 1:
         return None
-    _, path = sch._find_block(blk.name)
-    loops = [n for n in path if isinstance(n, LoopNode)]
-    tile = _tile_suffix(loops, bn_node)
-    if not tile:
-        return None
-    # per-axis tile extent = product of tile loops feeding that axis
-    per_axis: Dict[str, int] = {a.name: 1 for a in blk.axes}
-    for ln in tile:
-        for ax in blk.axes:
-            if ln.var in bn_node.bindings[ax.name].vars():
-                per_axis[ax.name] *= ln.extent
+    per_axis = _per_axis_tile(sch, bn_node)
+    if all(v == 1 for v in per_axis.values()):
+        return None  # schedule carries no tile information
     s_axes = blk.spatial_axes
     r_axes = blk.reduce_axes
     # m = second-to-last spatial, n = last spatial, k = first reduce
@@ -61,41 +97,170 @@ def extract_matmul_blocks(sch: Schedule) -> Optional[Tuple[int, int, int]]:
     return (max(bm, 1), max(bn, 1), max(bk, 1))
 
 
+def extract_row_block(sch: Schedule) -> Optional[int]:
+    """Row-tile extent (first spatial axis) for row-wise workloads (sfm):
+    the max tile extent any block gives its leading spatial axis."""
+    best = 0
+    for n in iter_nodes(sch.root):
+        if not isinstance(n, BlockNode) or not n.block.spatial_axes:
+            continue
+        per_axis = _per_axis_tile(sch, n)
+        best = max(best, per_axis.get(n.block.spatial_axes[0].name, 1))
+    return best if best > 1 else None
+
+
+def snap_blocks(
+    dims: Tuple[int, ...], blocks: Tuple[int, ...]
+) -> Tuple[int, ...]:
+    """Snap each sampled tile extent to the nearest divisor of its dim
+    (Pallas BlockSpecs need exact tiling)."""
+    return tuple(_best_divisor(d, b) for d, b in zip(dims, blocks))
+
+
+# Reject lowerings whose grid would explode: a 1-wide tile on a 128^3
+# matmul means 2M grid steps — useless on the MXU and pathological in
+# interpret mode.  Rejection surfaces as a failed build, which the search
+# treats as an ordinary candidate rejection.
+MAX_GRID_STEPS = 1 << 18
+
+
+def _check_grid(steps: int, blocks) -> None:
+    if steps > MAX_GRID_STEPS:
+        raise ValueError(
+            f"pallas grid of {steps} steps (blocks {tuple(blocks)}) exceeds "
+            f"cap {MAX_GRID_STEPS}; schedule tiles too fine for this backend"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-workload lowerings: schedule -> (fn, meta)
+# ---------------------------------------------------------------------------
+
+
+def lower_dense(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Tuned dense (+fused epilogue) via the Pallas matmul kernel."""
+    from ..kernels import matmul as mm
+
+    func = sch.func
+    sampled = extract_matmul_blocks(sch)
+    X, W = func.inputs[0], func.inputs[1]
+    M, K = X.shape
+    N = W.shape[1]
+    blocks = snap_blocks((M, N, K), sampled or DEFAULT_BLOCKS)
+    bm, bn, bk = blocks
+    _check_grid((M // bm) * (N // bn) * (K // bk), blocks)
+    # epilogue from the ORIGINAL workload name (dense_<epilogue>)
+    epilogue = "none"
+    if func.name.startswith("dense_"):
+        epilogue = func.name[len("dense_"):]
+    meta = _block_meta("matmul", sampled, blocks)
+
+    def fn(inputs: Dict):
+        out = mm.matmul(
+            inputs["X"],
+            inputs["W"],
+            inputs.get("bias"),
+            epilogue=epilogue,
+            block_sizes=blocks,
+            interpret=interpret,
+        )
+        return {func.outputs[0].name: out}
+
+    return fn, meta
+
+
+def lower_batch_matmul(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Tuned batched matmul via the Pallas bmm kernel (batch grid dim)."""
+    from ..kernels import matmul as mm
+
+    func = sch.func
+    sampled = extract_matmul_blocks(sch)
+    A = func.inputs[0]
+    _, M, K = A.shape
+    N = func.inputs[1].shape[2]
+    B = A.shape[0]
+    blocks = snap_blocks((M, N, K), sampled or DEFAULT_BLOCKS)
+    bm, bn, bk = blocks
+    _check_grid(B * (M // bm) * (N // bn) * (K // bk), blocks)
+    meta = _block_meta("batch_matmul", sampled, blocks)
+
+    def fn(inputs: Dict):
+        out = mm.batch_matmul(
+            inputs["A"], inputs["B"], block_sizes=blocks, interpret=interpret
+        )
+        return {func.outputs[0].name: out}
+
+    return fn, meta
+
+
+def lower_sfm(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Tuned row softmax via the Pallas online-softmax kernel."""
+    from ..kernels import softmax as sm
+
+    func = sch.func
+    M = func.inputs[0].shape[0]
+    sampled = extract_row_block(sch)
+    (bm,) = snap_blocks((M,), (sampled or DEFAULT_ROW_BLOCK,))
+    meta = {
+        "pallas_kernel": "row_softmax",
+        "pallas_rows_sampled": sampled,
+        "pallas_rows_snapped": bm,
+    }
+
+    def fn(inputs: Dict):
+        out = sm.row_softmax(inputs["A"], block_rows=bm, interpret=interpret)
+        return {func.outputs[0].name: out}
+
+    return fn, meta
+
+
+def _block_meta(kernel: str, sampled, snapped) -> Dict[str, Any]:
+    meta: Dict[str, Any] = {
+        "pallas_kernel": kernel,
+        "pallas_blocks_snapped": list(snapped),
+    }
+    if sampled is not None:
+        meta["pallas_blocks_sampled"] = list(sampled)
+        if tuple(sampled) != tuple(snapped):
+            meta["pallas_blocks_adjusted"] = True
+    else:
+        meta["pallas_blocks_source"] = "default"
+    return meta
+
+
+def lower_to_pallas(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Dispatch a supported schedule to its Pallas lowering.
+
+    Returns ``(fn, meta)`` where ``fn`` is ``callable(dict) -> dict`` and
+    ``meta`` records the kernel used plus sampled/snapped tile provenance.
+    Raises ``ValueError`` for unsupported workloads (check ``supports``).
+    """
+    name = sch.func.name
+    if name.startswith("dense_"):
+        return lower_dense(sch, interpret=interpret)
+    if name == "batch_matmul":
+        return lower_batch_matmul(sch, interpret=interpret)
+    if name == "sfm":
+        return lower_sfm(sch, interpret=interpret)
+    raise ValueError(f"no Pallas lowering for workload {name!r}")
+
+
 def lower_dense_to_pallas(
     sch: Schedule,
     *,
     interpret: bool = True,
 ):
-    """Build a callable running the tuned dense workload via the Pallas
-    matmul kernel with extracted block sizes.  Returns (fn, blocks)."""
-    from ..kernels import matmul as mm
-
-    blocks = extract_matmul_blocks(sch)
-    if blocks is None:
-        raise ValueError("schedule has no tensorizable matmul block")
-    func = sch.func
-    # identify epilogue from the ORIGINAL workload name (dense_<epilogue>)
-    epilogue = "none"
-    if func.name.startswith("dense_"):
-        epilogue = func.name[len("dense_"):]
-
-    def fn(inputs: Dict):
-        x, w = inputs["X"], inputs["W"]
-        bias = inputs.get("bias")
-        M, K = x.shape
-        N = w.shape[1]
-        bm, bn, bk = blocks
-        # snap to divisors (Pallas needs exact tiling)
-        bm = _best_divisor(M, bm)
-        bn = _best_divisor(N, bn)
-        bk = _best_divisor(K, bk)
-        out = mm.matmul(
-            x, w, bias, epilogue=epilogue, block_sizes=(bm, bn, bk),
-            interpret=interpret,
-        )
-        return {func.outputs[0].name: out}
-
-    return fn, blocks
+    """Back-compat wrapper: (fn, snapped blocks) for a dense schedule."""
+    fn, meta = lower_dense(sch, interpret=interpret)
+    return fn, tuple(meta["pallas_blocks_snapped"])
 
 
 def _best_divisor(n: int, target: int) -> int:

@@ -38,7 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from ..backends import jnp_backend
+from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
 from ..core.validator import first_valid_schedule, validate_trace
@@ -66,6 +66,8 @@ class CompiledKernel:
     source: str  # "database" | "default"
     latency_s: float = float("inf")
     grad_fn: Optional[Callable] = None  # custom_vjp-wrapped positional call
+    meta: Optional[Dict[str, Any]] = None  # lowering provenance (backend,
+                                           # snapped Pallas blocks, ...)
 
 
 class DispatchContext:
@@ -93,6 +95,7 @@ class DispatchContext:
         mode: str = "best",
         use_mxu: bool = True,
         default_seed_scan: int = 8,
+        backend: Optional[str] = None,
     ):
         if mode not in ("best", "default"):
             raise ValueError(f"unknown dispatch mode {mode!r}")
@@ -102,7 +105,18 @@ class DispatchContext:
         self.mode = mode
         self.use_mxu = use_mxu
         self.default_seed_scan = default_seed_scan
-        self.stats: Dict[str, int] = {"hits": 0, "misses": 0}
+        # the lowering backend this context serves: the *same* spec the
+        # measurement stack built candidates through (jnp-measures /
+        # pallas-serves parity would silently break otherwise).  None ->
+        # the ambient REPRO_BACKEND default, matching the runners'.
+        # Resolve eagerly: a typo'd spec must raise here, not surface as
+        # silent universal misses when kernel() swallows lowering errors.
+        self.backend = resolve_backend_spec(backend)
+        get_backend(self.backend)
+        self.stats: Dict[str, int] = {
+            "hits": 0, "misses": 0, "attention_fused": 0,
+        }
+        self.hits_by_key: Dict[str, int] = {}
         self._funcs: Dict[str, PrimFunc] = {}
         self._task_mxu: Dict[str, bool] = {}
         self._compiled: Dict[str, Optional[CompiledKernel]] = {}
@@ -180,15 +194,25 @@ class DispatchContext:
             got = self._schedule_for(key, func)
             if got is not None:
                 sch, source, lat = got
-                lowered = jnp_backend.build(sch)
-                kern = CompiledKernel(
-                    key=key,
-                    func=func,
-                    fn=jax.jit(lowered.fn),
-                    out_name=func.outputs[0].name,
-                    source=source,
-                    latency_s=lat,
-                )
+                try:
+                    lowered = get_backend(self.backend).lower(
+                        sch, workload_key=key
+                    )
+                except Exception:
+                    # a schedule the backend cannot realize (e.g. a Pallas
+                    # grid cap) is a miss, not a crash: the layer falls
+                    # back to its jnp reference path
+                    lowered = None
+                if lowered is not None:
+                    kern = CompiledKernel(
+                        key=key,
+                        func=func,
+                        fn=jax.jit(lowered.fn),
+                        out_name=func.outputs[0].name,
+                        source=source,
+                        latency_s=lat,
+                        meta=lowered.meta,
+                    )
         self._compiled[key] = kern
         return kern
 
@@ -207,6 +231,7 @@ class DispatchContext:
             self.stats["misses"] += 1
             return None
         self.stats["hits"] += 1
+        self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
         return kern
 
     def dense(self, x: jnp.ndarray, w: jnp.ndarray) -> Optional[jnp.ndarray]:
@@ -233,6 +258,99 @@ class DispatchContext:
         x2 = x.reshape(m, k).astype(jnp.float32)
         out = kern.grad_fn(x2, w.astype(jnp.float32))
         return out.reshape(*x.shape[:-1], n).astype(x.dtype)
+
+    def batch_matmul(
+        self, a: jnp.ndarray, b: jnp.ndarray
+    ) -> Optional[jnp.ndarray]:
+        """Tuned batched ``a @ b``; a: (..., M, K), b: (..., K, N) with
+        identical leading (batch) dims.  Returns float32 (the workload's
+        accumulate dtype — callers like online-softmax attention need the
+        f32 scores); None -> caller falls back to its jnp einsum.
+        """
+        if a.ndim < 3 or b.ndim != a.ndim or a.shape[-1] != b.shape[-2]:
+            return None
+        if a.shape[:-2] != b.shape[:-2]:
+            return None
+        bdims = a.shape[:-2]
+        B = 1
+        for s in bdims:
+            B *= int(s)
+        M, K = int(a.shape[-2]), int(a.shape[-1])
+        N = int(b.shape[-1])
+        kern = self._lookup(workload_key("batch_matmul", b=B, m=M, n=N, k=K))
+        if kern is None:
+            return None
+        if kern.grad_fn is None:
+            def ref(a2, b2):
+                return jnp.einsum(
+                    "bmk,bkn->bmn", a2, b2, preferred_element_type=jnp.float32
+                )
+
+            def fwd_kernel(a2, b2):
+                return kern.fn({"A": a2, "B": b2})[kern.out_name]
+
+            kern.grad_fn = _with_reference_grad(fwd_kernel, ref)
+        a2 = a.reshape(B, M, K).astype(jnp.float32)
+        b2 = b.reshape(B, K, N).astype(jnp.float32)
+        out = kern.grad_fn(a2, b2)
+        return out.reshape(*bdims, M, N)
+
+    def attention(
+        self,
+        q: jnp.ndarray,
+        k: jnp.ndarray,
+        v: jnp.ndarray,
+        *,
+        causal: bool = True,
+        window: Optional[Any] = None,
+        softcap: Optional[float] = None,
+        scale: Optional[float] = None,
+        q_offset: int = 0,
+    ) -> Optional[jnp.ndarray]:
+        """Fused flash-attention through the active backend, if it serves
+        one (the Pallas backend does; jnp has no fused path).
+
+        Only static configurations are fusable: a traced ``window`` (the
+        per-layer scan metadata) or a nonzero ``q_offset`` (decode) falls
+        back to the layer's chunked online-softmax path.  Backward runs
+        the reference-attention VJP, like every other dispatched kernel.
+        """
+        be = get_backend(self.backend)
+        fused = getattr(be, "fused_attention", None)
+        if fused is None:
+            return None
+        if isinstance(q_offset, jax.core.Tracer) or q_offset != 0:
+            return None
+        if window is not None:
+            if isinstance(window, jax.core.Tracer):
+                return None
+            w = int(window)
+            window = None if w <= 0 else w  # 0 = global attention
+        if softcap is not None and isinstance(softcap, jax.core.Tracer):
+            return None
+        B, H, S, D = (int(s) for s in q.shape)
+        KVH, T = int(k.shape[1]), int(k.shape[2])
+        if v.shape != k.shape or T != S or H % KVH != 0:
+            return None
+
+        def kernel_fn(q2, k2, v2):
+            # block sizes are the backend's concern, not the dispatch
+            # layer's — it picks/snaps tiles for its own hardware
+            return fused(
+                q2, k2, v2, causal=causal, window=window, softcap=softcap,
+                scale=scale,
+            )
+
+        def ref(q2, k2, v2):
+            from ..kernels import ref as kref
+
+            return kref.flash_attention(
+                q2, k2, v2, causal=causal, window=window, softcap=softcap,
+                scale=scale,
+            )
+
+        self.stats["attention_fused"] += 1
+        return _with_reference_grad(kernel_fn, ref)(q, k, v)
 
     def rmsnorm(
         self, x: jnp.ndarray, w: jnp.ndarray, eps: float

@@ -47,9 +47,10 @@ class TaskSite:
     """One primitive site mapped to a workload, pre-dedup.
 
     ``dispatchable`` marks sites whose memory layout the dispatch layer
-    can serve today (``x @ w`` with w stored (k, n); rmsnorm).  A
-    transposed-weight matmul (e.g. tied-embedding unembed, attention
-    score/value contractions) is still a legitimate *tuning* target but
+    can serve today (``x @ w`` with w stored (k, n); canonical-layout
+    ``batch_matmul`` — the attention score/value contractions and MoE
+    expert FFNs; rmsnorm).  A transposed-weight matmul (e.g. the
+    tied-embedding unembed) is still a legitimate *tuning* target but
     cannot be swapped back into the model yet, so benchmarks that spend
     trials only where they can cash them set ``dispatchable_only=True``.
     """
@@ -129,7 +130,23 @@ def _dot_site(eqn) -> Optional[TaskSite]:
     if min(m, n, k) < 1:
         return None
     if b > 1:
-        return TaskSite("batch_matmul", dict(b=b, m=m, n=n, k=k), 1.0)
+        # the batch_matmul dispatch hook serves a(..., m, k) @ b(..., k, n)
+        # with matching leading batch dims: batch dims lead both operands
+        # in order, lhs contracts its last dim, rhs its second-to-last —
+        # the layout the attention score/value contractions (via bmm_op)
+        # and the MoE expert FFN einsums trace to.  Anything else (e.g.
+        # tbg-style head-interleaved layouts) tunes but can't swap in.
+        r = len(lhs)
+        disp = (
+            len(rhs) == r
+            and tuple(lb) == tuple(range(r - 2))
+            and tuple(rb) == tuple(range(r - 2))
+            and tuple(lc) == (r - 1,)
+            and tuple(rc) == (r - 2,)
+        )
+        return TaskSite(
+            "batch_matmul", dict(b=b, m=m, n=n, k=k), 1.0, dispatchable=disp
+        )
     # the dense dispatch hook serves x(..., k) @ w(k, n): lhs contracts its
     # trailing dims, the 2-D rhs contracts dim 0.  Anything else (e.g. the
     # tied-embedding unembed with w stored (n, k)) tunes but can't swap in.

@@ -95,3 +95,59 @@ def matmul(
         else None,
         interpret=interpret,
     )(*args)
+
+
+def _bmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def batch_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_sizes: Tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y[b] = x[b] @ w[b]; x: (B, M, K), w: (B, K, N).
+
+    Batch rides a leading parallel grid dimension; per-batch tiling is
+    identical to :func:`matmul` (fp32 VMEM accumulator across the
+    sequential k dimension).  The attention score/value contractions and
+    MoE expert FFNs lower here.
+    """
+    B, M, K = x.shape
+    B2, K2, N = w.shape
+    assert B == B2 and K == K2, (x.shape, w.shape)
+    bm, bn, bk = block_sizes
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"blocks {block_sizes} must divide {(M, N, K)}"
+    )
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_bmm_kernel, nk=nk),
+        grid=(B, M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(x, w)

@@ -54,6 +54,26 @@ def dense_op(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
             return out
     return jnp.einsum("...d,df->...f", x, w)
 
+
+def bmm_op(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched matmul ``a @ b`` — the batched dispatch point.
+
+    a: (..., M, K), b: (..., K, N), identical leading batch dims; returns
+    float32 (accumulate dtype — the attention online-softmax needs f32
+    scores).  Under an active DispatchContext with a tuned
+    ``batch_matmul`` record for this (B, M, N, K), the tuned kernel
+    executes; otherwise the jnp einsum reference runs.  The attention
+    score/value contractions and MoE expert FFNs call through here.
+    """
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        out = ctx.batch_matmul(a, b)
+        if out is not None:
+            return out
+    return jnp.einsum(
+        "...mk,...kn->...mn", a, b, preferred_element_type=jnp.float32
+    )
+
 # logical-axis registry: path-pattern -> axes tuple, filled by init fns.
 # (simpler than threading metadata through every pytree leaf)
 PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {}
@@ -160,12 +180,27 @@ def chunked_attention(
     scale: Optional[float] = None,
 ) -> jnp.ndarray:
     """Online-softmax attention, O(S·chunk) memory.  GQA folded via repeat
-    of the *sharded* head dim (no global materialization under GSPMD)."""
+    of the *sharded* head dim (no global materialization under GSPMD).
+
+    Two tuned-kernel dispatch points: under an active DispatchContext the
+    whole call may swap to the backend's fused flash-attention kernel
+    (static window/offset only), and otherwise the score and value
+    contractions route through :func:`bmm_op` so tuned ``batch_matmul``
+    records swap into the online-softmax scan."""
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        fused = ctx.attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset,
+        )
+        if fused is not None:
+            return fused
     B, H, S, D = q.shape
     KVH, T = k.shape[1], k.shape[2]
     G = H // KVH
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     chunk = min(chunk, T)
+    T_valid = T  # un-padded key count: zero-padded positions must mask out
     if T % chunk:
         pad = chunk - T % chunk
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -177,18 +212,21 @@ def chunked_attention(
     q_pos = q_offset + jnp.arange(S)
 
     qg = q.reshape(B, KVH, G, S, D)
+    # (B·KVH, G·S, D): the canonical batched-matmul layout — the same
+    # (b, m, k) the task extractor keys the contraction under, so tuned
+    # batch_matmul records dispatch through bmm_op
+    qf = qg.reshape(B * KVH, G * S, D)
 
     def step(carry, inp):
         m, l, acc = carry
         ci, kb, vb = inp  # (B,KVH,chunk,D)
-        s = jnp.einsum(
-            "bkgsd,bktd->bkgst", qg, kb, preferred_element_type=jnp.float32
-        ) * scale
+        kt = kb.reshape(B * KVH, chunk, D).swapaxes(1, 2)  # (B·KVH, D, chunk)
+        s = bmm_op(qf, kt).reshape(B, KVH, G, S, chunk) * scale
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         k_pos = ci * chunk + jnp.arange(chunk)
         mask = jnp.ones((S, chunk), dtype=bool)
-        mask = mask & (k_pos[None, :] < k.shape[2])
+        mask = mask & (k_pos[None, :] < T_valid)
         if causal:
             mask = mask & (k_pos[None, :] <= q_pos[:, None])
         if window is not None:
@@ -200,10 +238,11 @@ def chunked_attention(
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m - m_new)
         l_new = l * alpha + p.sum(axis=-1, keepdims=True)
-        acc_new = acc * alpha + jnp.einsum(
-            "bkgst,bktd->bkgsd", p.astype(vb.dtype), vb,
-            preferred_element_type=jnp.float32,
-        )
+        pv = bmm_op(
+            p.reshape(B * KVH, G * S, chunk).astype(vb.dtype),
+            vb.reshape(B * KVH, chunk, D),
+        ).reshape(B, KVH, G, S, D)
+        acc_new = acc * alpha + pv
         return (m_new, l_new, acc_new), None
 
     m0 = jnp.full((B, KVH, G, S, 1), -1e30, dtype=jnp.float32)
@@ -387,13 +426,15 @@ def moe(
 
     src = _shd.shard(src, "tokens")
     buf = _shd.shard(buf.at[e_sc, p_sc].set(src, mode="drop"), "experts")
-    # expert FFN on (E, C, D)
-    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
-    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    # expert FFN on (E, C, D) — batched matmuls in canonical layout, so
+    # tuned batch_matmul records dispatch through bmm_op (f32 accumulate,
+    # cast back to the activation dtype as before)
+    h = bmm_op(buf, p["wi"]).astype(buf.dtype)
+    g = bmm_op(buf, p["wg"]).astype(buf.dtype)
     actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act]
     h = actf(g) * h
     out_e = _shd.shard(
-        jnp.einsum("ecf,efd->ecd", h, p["wo"]), "experts"
+        bmm_op(h, p["wo"]).astype(buf.dtype), "experts"
     )  # (E, C, D)
     # gather back + weight
     gathered = out_e[e_sc, p_sc]  # (T*k, D)

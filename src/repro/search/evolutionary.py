@@ -96,9 +96,10 @@ class EvolutionarySearch:
 
     def _provenance(self, res) -> Dict:
         """Build/run provenance persisted into ``TuningRecord.meta``."""
-        return {
+        meta = {
             "func": self.func.name,
             "runner": getattr(self.runner, "name", type(self.runner).__name__),
+            "backend": getattr(self.runner, "backend", "jnp"),
             "build_time_s": round(res.build_time_s, 6),
             "run_time_s": round(res.run_time_s, 6),
             "source": res.source,
@@ -106,6 +107,12 @@ class EvolutionarySearch:
             "failures_so_far": len(self.errors),
             "recent_errors": [e for _, e in self.errors[-3:]],
         }
+        # lowering provenance from the backend (e.g. the *snapped* Pallas
+        # block sizes actually measured, vs the sampled tile) — never lose
+        # what really ran
+        if getattr(res, "meta", None):
+            meta.update(res.meta)
+        return meta
 
     def _validated(self, trace: Trace) -> Optional[Candidate]:
         res = validate_trace(self.func, trace)

@@ -29,13 +29,22 @@ class CachedRunner(Runner):
     def name(self) -> str:  # type: ignore[override]
         return f"cached+{self.inner.name}"
 
+    @property
+    def backend(self) -> str:  # type: ignore[override]
+        return getattr(self.inner, "backend", "jnp")
+
+    def _hash(self, mi: MeasureInput) -> str:
+        # the backend is part of the cache key: the same trace measures
+        # differently through different lowerings
+        return structural_hash(f"{self.backend}::{mi.workload_key}", mi.trace)
+
     def run(self, inputs: List[MeasureInput]) -> List[MeasureResult]:
         results: List[MeasureResult] = [None] * len(inputs)  # type: ignore[list-item]
         primary: List[int] = []          # first occurrence of each missing hash
         primary_hash: List[str] = []
         followers: Dict[str, List[int]] = {}  # intra-batch duplicates
         for i, mi in enumerate(inputs):
-            h = structural_hash(mi.workload_key, mi.trace)
+            h = self._hash(mi)
             if h in self.cache:
                 self.hits += 1
                 results[i] = self.cache[h].as_cache_hit()

@@ -1,21 +1,22 @@
 """In-process Builder and Runner (serial reference implementation).
 
-``LocalBuilder`` lowers each candidate through the jnp backend and jits
-it; ``LocalRunner`` times the artifacts.  The split matters even locally:
-the builder's output is reusable (e.g. for correctness checks) and the
-timing loop is identical for every in-process runner.  Process-parallel
-measurement lives in :mod:`pool`.
+``LocalBuilder`` lowers each candidate through the selected lowering
+backend (``backend=`` registry spec, default the ambient
+``REPRO_BACKEND``) and jits it; ``LocalRunner`` times the artifacts.  The
+split matters even locally: the builder's output is reusable (e.g. for
+correctness checks) and the timing loop is identical for every in-process
+runner.  Process-parallel measurement lives in :mod:`pool`.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
-from ...backends import jnp_backend
+from ...backends.registry import get_backend, resolve_backend_spec
 from ...core.tir import PrimFunc, random_inputs
 from ...core.validator import validate_trace
 from .protocol import Builder, BuildResult, MeasureInput, MeasureResult, Runner
@@ -26,7 +27,12 @@ class LocalBuilder(Builder):
 
     name = "local"
 
+    def __init__(self, backend: Optional[str] = None):
+        self.backend = resolve_backend_spec(backend)
+        get_backend(self.backend)  # fail fast on a typo'd spec
+
     def build(self, inputs: List[MeasureInput]) -> List[BuildResult]:
+        be = get_backend(self.backend)
         out: List[BuildResult] = []
         for mi in inputs:
             t0 = time.perf_counter()
@@ -38,10 +44,14 @@ class LocalBuilder(Builder):
                         out.append(BuildResult(error=f"invalid trace: {v.reason}"))
                         continue
                     sch = v.schedule
-                lowered = jnp_backend.build(sch)
+                lowered = be.lower(sch, workload_key=mi.workload_key)
                 fn = jax.jit(lowered.fn)
                 out.append(
-                    BuildResult(artifact=fn, build_time_s=time.perf_counter() - t0)
+                    BuildResult(
+                        artifact=fn,
+                        build_time_s=time.perf_counter() - t0,
+                        meta=lowered.meta,
+                    )
                 )
             except Exception as e:  # lowering failure -> rejection, not crash
                 out.append(
@@ -91,11 +101,18 @@ class LocalRunner(Runner):
 
     name = "local"
 
-    def __init__(self, repeats: int = 3, warmup: int = 1, timeout_s: float = 10.0):
+    def __init__(
+        self,
+        repeats: int = 3,
+        warmup: int = 1,
+        timeout_s: float = 10.0,
+        backend: Optional[str] = None,
+    ):
         self.repeats = repeats
         self.warmup = warmup
         self.timeout_s = timeout_s
-        self.builder = LocalBuilder()
+        self.builder = LocalBuilder(backend=backend)
+        self.backend = self.builder.backend
         self._inputs_cache: Dict[str, Dict] = {}
         self.n_measured = 0
         self.n_failed = 0
@@ -126,6 +143,7 @@ class LocalRunner(Runner):
                 self.timeout_s,
             )
             res.build_time_s = br.build_time_s
+            res.meta = br.meta
             self.n_measured += 1
             if not res.ok:
                 self.n_failed += 1
@@ -133,4 +151,8 @@ class LocalRunner(Runner):
         return out
 
     def stats(self):
-        return {"measured": self.n_measured, "failed": self.n_failed}
+        return {
+            "measured": self.n_measured,
+            "failed": self.n_failed,
+            "backend": self.backend,
+        }

@@ -1,9 +1,11 @@
 """Process-pool measurement: parallel build+time with fault isolation.
 
 Each worker process takes a candidate (the pre-validated schedule when
-it ships, else a trace replay), lowers it through the jnp backend, jits,
-and times it — build and run are fused inside the worker because
-compiled artifacts cannot cross a process boundary.
+it ships, else a trace replay), lowers it through the lowering backend
+named in the payload (jnp, pallas, ... — see
+:mod:`repro.backends.registry`), jits, and times it — build and run are
+fused inside the worker because compiled artifacts cannot cross a
+process boundary.
 The parent enforces:
 
 * **wall-clock timeouts** — a batch gets ``timeout_s`` per candidate
@@ -51,7 +53,7 @@ def _measure_worker(payload: dict) -> dict:
     try:
         import jax
 
-        from ...backends import jnp_backend
+        from ...backends.registry import get_backend
         from ...core.tir import random_inputs
         from ...core.trace import Trace
         from ...core.validator import validate_trace
@@ -71,7 +73,8 @@ def _measure_worker(payload: dict) -> dict:
                     "run_time_s": 0.0,
                 }
             sch = v.schedule
-        lowered = jnp_backend.build(sch)
+        be = get_backend(payload.get("backend", "jnp"))
+        lowered = be.lower(sch, workload_key=payload.get("workload_key", ""))
         fn = jax.jit(lowered.fn)
         ins_key = func.name + str(tuple(b.shape for b in func.inputs))
         ins = _WORKER_INPUT_CACHE.get(ins_key)
@@ -90,6 +93,7 @@ def _measure_worker(payload: dict) -> dict:
             "error": res.error,
             "build_time_s": build_s,
             "run_time_s": res.run_time_s,
+            "meta": lowered.meta,
         }
     except Exception as e:
         return {
@@ -104,7 +108,7 @@ def _warm_worker(_: int) -> bool:
     """Pre-import the heavy deps so the first real batch finds workers hot."""
     import jax  # noqa: F401
 
-    from ...backends import jnp_backend  # noqa: F401
+    from ...backends import jnp_backend, registry  # noqa: F401
 
     return True
 
@@ -125,7 +129,14 @@ class ProcessPoolRunner(Runner):
         startup_grace_s: float = 60.0,
         worker_fn: Optional[Callable[[dict], dict]] = None,
         start_method: str = "spawn",
+        backend: Optional[str] = None,
     ):
+        from ...backends.registry import get_backend, resolve_backend_spec
+
+        self.backend = resolve_backend_spec(backend)
+        # validate eagerly: a typo'd spec must raise here, not burn the
+        # whole tuning budget as per-candidate "failures" inside workers
+        get_backend(self.backend)
         self.max_workers = max_workers or min(max(os.cpu_count() or 2, 2), 8)
         self.timeout_s = timeout_s
         self.repeats = repeats
@@ -213,6 +224,7 @@ class ProcessPoolRunner(Runner):
             "timeout_s": self.timeout_s,
             "repeats": self.repeats,
             "warmup": self.warmup,
+            "backend": self.backend,
         }
         if mi.schedule is not None:
             # ship the pre-validated schedule (it pickles at ~KBs) so the
@@ -319,7 +331,7 @@ class ProcessPoolRunner(Runner):
                 msg += "; trace quarantined"
             return MeasureResult(float("inf"), msg)
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict:
         return {
             "measured": self.n_measured,
             "timeouts": self.n_timeouts,
@@ -327,4 +339,5 @@ class ProcessPoolRunner(Runner):
             "quarantined_traces": len(self.quarantined),
             "quarantine_rejects": self.n_quarantine_rejects,
             "workers": self.max_workers,
+            "backend": self.backend,
         }

@@ -54,11 +54,17 @@ class MeasureInput:
 
 @dataclass
 class BuildResult:
-    """Output of a Builder: a runnable artifact or an error."""
+    """Output of a Builder: a runnable artifact or an error.
+
+    ``meta`` carries lowering provenance from the selected backend
+    (backend name, snapped Pallas block sizes, fallbacks) — see
+    :class:`repro.backends.registry.Lowered`.
+    """
 
     artifact: Optional[Callable] = None  # callable(dict inputs) -> dict outputs
     error: str = ""
     build_time_s: float = 0.0
+    meta: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -67,13 +73,17 @@ class BuildResult:
 
 @dataclass
 class MeasureResult:
-    """Outcome of one measurement.  ``latency_s == inf`` means rejection."""
+    """Outcome of one measurement.  ``latency_s == inf`` means rejection.
+
+    ``meta`` is the build's lowering provenance (see ``BuildResult.meta``)
+    and flows into ``TuningRecord.meta`` for the winning candidates."""
 
     latency_s: float
     error: str = ""
     build_time_s: float = 0.0
     run_time_s: float = 0.0
     source: str = "measured"  # measured | cache | quarantine | timeout
+    meta: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -84,9 +94,13 @@ class MeasureResult:
 
 
 class Builder(abc.ABC):
-    """Lowers and compiles a batch of candidates."""
+    """Lowers and compiles a batch of candidates.
+
+    ``backend`` names the lowering-backend spec the builder compiles
+    through (see :mod:`repro.backends.registry`)."""
 
     name: str = "builder"
+    backend: str = "jnp"
 
     @abc.abstractmethod
     def build(self, inputs: List[MeasureInput]) -> List[BuildResult]:
@@ -97,6 +111,7 @@ class Runner(abc.ABC):
     """Measures a batch of candidates end to end."""
 
     name: str = "runner"
+    backend: str = "jnp"
 
     @abc.abstractmethod
     def run(self, inputs: List[MeasureInput]) -> List[MeasureResult]:

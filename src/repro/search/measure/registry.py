@@ -72,7 +72,9 @@ def runner_names() -> list:
 def create_runner(spec: str, **kwargs) -> Runner:
     """Instantiate a runner from a ``[wrapper+]*base`` spec string.
 
-    ``kwargs`` go to the base runner's factory.
+    ``kwargs`` go to the base runner's factory; ``backend=`` (a lowering
+    -backend spec from :mod:`repro.backends.registry`) selects what the
+    runner builds candidates through.
     """
     parts = spec.split("+")
     base_name = parts[-1]
@@ -90,14 +92,16 @@ def create_runner(spec: str, **kwargs) -> Runner:
     return runner
 
 
-def as_runner(obj) -> Runner:
+def as_runner(obj, backend=None) -> Runner:
     """Normalize anything runner-like to the batch ``Runner`` protocol:
     ``None`` -> default LocalRunner, str -> registry spec, Runner -> itself,
-    legacy ``.measure()`` objects -> adapter."""
+    legacy ``.measure()`` objects -> adapter.  ``backend`` threads a
+    lowering-backend spec into runners created here; an already-built
+    ``Runner`` instance keeps the backend it was constructed with."""
     if obj is None:
-        return LocalRunner()
+        return LocalRunner(backend=backend)
     if isinstance(obj, str):
-        return create_runner(obj)
+        return create_runner(obj, backend=backend)
     if isinstance(obj, Runner):
         return obj
     if hasattr(obj, "measure"):

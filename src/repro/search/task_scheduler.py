@@ -51,6 +51,8 @@ class TaskScheduler:
         database: Optional[Database] = None,
         config: Optional[SearchConfig] = None,
         runner=None,  # registry spec str, measure.Runner, or legacy LocalRunner
+        backend: Optional[str] = None,  # lowering-backend spec for runners
+                                        # created here (None -> REPRO_BACKEND)
         verbose: bool = False,
         patience: int = 4,
         rel_improvement: float = 1e-3,
@@ -61,7 +63,8 @@ class TaskScheduler:
         self.db = database
         # one shared runner across tasks: a caching runner then dedups
         # identical candidates across sibling tasks with equal shapes
-        self.runner = as_runner(runner)
+        self.runner = as_runner(runner, backend=backend)
+        self.backend = getattr(self.runner, "backend", "jnp")
         cfg = config or SearchConfig()
         self.verbose = verbose
         self.patience = patience

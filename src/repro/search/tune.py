@@ -13,6 +13,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from ..backends import jnp_backend
+from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import Module, SpaceGenerator, default_modules
 from ..core.schedule import Schedule
 from ..core.tir import PrimFunc
@@ -36,6 +37,7 @@ class TuneResult:
     history: list
     tuning_time_s: float = 0.0
     runner_name: str = "local"
+    backend: str = "jnp"
     measure_failures: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
@@ -60,6 +62,8 @@ def tune_workload(
     database: Optional[Database] = None,
     runner=None,  # registry spec str ("local", "pool", "cached+pool"),
                   # a measure.Runner, or a legacy LocalRunner
+    backend: Optional[str] = None,  # lowering-backend spec ("jnp", "pallas");
+                                    # None -> REPRO_BACKEND env or "jnp"
     verbose: bool = False,
 ) -> TuneResult:
     import time
@@ -68,7 +72,7 @@ def tune_workload(
     func = get_workload(name, **shape_kwargs)
     key = workload_key(name, **shape_kwargs)
     space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
-    runner = as_runner(runner)
+    runner = as_runner(runner, backend=backend)
     t0 = time.perf_counter()
     search = EvolutionarySearch(
         func,
@@ -107,6 +111,7 @@ def tune_workload(
         history=search.history,
         tuning_time_s=dt,
         runner_name=getattr(runner, "name", type(runner).__name__),
+        backend=getattr(runner, "backend", resolve_backend_spec(backend)),
         measure_failures=search.total_failures,
         cache_hits=int(stats.get("cache_hits", 0)),
         cache_misses=int(stats.get("cache_misses", 0)),
@@ -114,17 +119,24 @@ def tune_workload(
     )
 
 
-def apply_trace(func: PrimFunc, trace: Trace):
-    """Replay a trace and lower it; returns (schedule, jitted fn)."""
+def apply_trace(func: PrimFunc, trace: Trace, backend: Optional[str] = None):
+    """Replay a trace and lower it through the selected backend;
+    returns (schedule, lowered) where ``lowered`` has ``.fn`` and
+    ``.meta`` (see :class:`repro.backends.registry.Lowered`)."""
     res = validate_trace(func, trace)
     if not res.ok:
         raise ValueError(f"invalid trace for {func.name}: {res.reason}")
-    lowered = jnp_backend.build(res.schedule)
+    be = get_backend(backend)
+    lowered = be.lower(res.schedule, workload_key=func.name)
+    lowered.func = func  # convenience for callers that need shapes
     return res.schedule, lowered
 
 
 def apply_best(
-    name: str, database: Database, shape_kwargs: Optional[Dict] = None
+    name: str,
+    database: Database,
+    shape_kwargs: Optional[Dict] = None,
+    backend: Optional[str] = None,
 ):
     """Lower the database-best trace for a workload (A.6 integration)."""
     shape_kwargs = shape_kwargs or {}
@@ -133,4 +145,4 @@ def apply_best(
     if rec is None:
         raise KeyError(f"no tuning record for {key}")
     func = get_workload(name, **shape_kwargs)
-    return apply_trace(func, rec.trace())
+    return apply_trace(func, rec.trace(), backend=backend)
