@@ -8,14 +8,19 @@ wall-clock noise in small CI smoke runs (forward timings are medians of
 a few repeats on shared runners).
 
 Optionally also asserts dispatch coverage: ``--require-dispatched-op
-batch_matmul`` fails unless at least one task of that op was actually
-served (the attention-contraction parity guarantee of the Pallas
-backend job).
+attention`` fails unless at least one task of that op was actually
+served — the Pallas backend job gates on the tuned fused-attention
+workload, so the tentpole path can never silently regress to the
+fixed-block default.  (It deliberately does *not* also require
+``batch_matmul`` there: when fused attention serves, the whole call
+bypasses the chunked score/value contractions — see the comment in
+ci.yml.)  The flag repeats for jobs that do need several ops.
 
 Usage::
 
     python benchmarks/check_regression.py [BENCH_end_to_end.json]
         [--min-speedup 1.0] [--tolerance 0.05]
+        [--require-dispatched-op attention]
         [--require-dispatched-op batch_matmul]
 """
 
@@ -33,8 +38,13 @@ def check(
     path: Path,
     min_speedup: float = 1.0,
     tolerance: float = 0.05,
-    require_dispatched_op: str = "",
+    require_dispatched_op: "str | list" = "",
 ) -> int:
+    required_ops = (
+        [require_dispatched_op]
+        if isinstance(require_dispatched_op, str) and require_dispatched_op
+        else list(require_dispatched_op or [])
+    )
     payload = json.loads(Path(path).read_text())
     models = payload.get("models", [])
     if not models:
@@ -55,23 +65,19 @@ def check(
             failures.append(
                 f"{name}: tuned/untuned speedup {speedup:.3f}x < {floor:.3f}x"
             )
-        if require_dispatched_op:
+        for op in required_ops:
             served = [
                 t for t in row.get("tasks", [])
-                if t.get("op") == require_dispatched_op and t.get("dispatched")
+                if t.get("op") == op and t.get("dispatched")
             ]
             present = [
-                t for t in row.get("tasks", [])
-                if t.get("op") == require_dispatched_op
+                t for t in row.get("tasks", []) if t.get("op") == op
             ]
-            print(
-                f"{name}: {require_dispatched_op} tasks dispatched "
-                f"{len(served)}/{len(present)}"
-            )
+            print(f"{name}: {op} tasks dispatched {len(served)}/{len(present)}")
             if not served:
                 failures.append(
-                    f"{name}: no {require_dispatched_op!r} task was "
-                    f"dispatched (extracted: {len(present)})"
+                    f"{name}: no {op!r} task was dispatched "
+                    f"(extracted: {len(present)})"
                 )
     if failures:
         print("FAIL:\n  " + "\n  ".join(failures))
@@ -89,9 +95,9 @@ def main(argv=None) -> int:
         help="relative wall-clock noise allowance on the floor",
     )
     ap.add_argument(
-        "--require-dispatched-op", default="",
+        "--require-dispatched-op", action="append", default=[],
         help="fail unless >=1 task of this op was dispatched (e.g. "
-             "batch_matmul)",
+             "batch_matmul); repeat the flag for several ops",
     )
     args = ap.parse_args(argv)
     return check(

@@ -32,10 +32,15 @@ Env knobs: ``REPRO_BENCH_TRIALS`` (per-task measurement budget, default
 ``REPRO_BACKEND`` (lowering backend, default ``jnp``),
 ``REPRO_E2E_MODELS`` (comma list, default ``smollm-135m``),
 ``REPRO_E2E_TASKS`` (task cap by weight x flops, default 6 — enough to
-cover both attention contractions), ``REPRO_E2E_SEQ`` (token tile,
+cover both attention contractions), ``REPRO_E2E_OPS`` (comma list
+restricting extraction to these op classes — the pallas-interpret CI
+job uses ``attention,batch_matmul`` so its budget goes to the ops its
+dispatch gate checks), ``REPRO_E2E_SEQ`` (token tile,
 default 128), ``REPRO_TIMEOUT_S`` (per-candidate measurement timeout;
 CI smoke lowers it so pathological interpret-mode candidates get cut
-off early).
+off early), ``REPRO_E2E_SKIP_TUNED=1`` (skip tuning for tasks that
+already hold a database record — the CI database cache relies on this
+to avoid re-tuning identical tasks on every push).
 """
 
 from __future__ import annotations
@@ -66,6 +71,23 @@ JSON_PATH = REPO_ROOT / "BENCH_end_to_end.json"
 def _models() -> List[str]:
     raw = os.environ.get("REPRO_E2E_MODELS", "smollm-135m")
     return [m.strip() for m in raw.split(",") if m.strip()]
+
+
+def task_selection_env():
+    """The env knobs that define the tuning problem: (models, seq,
+    max_tasks, ops).  Shared with ``benchmarks/task_cache_key.py`` — the
+    CI database cache key must hash exactly the task set this benchmark
+    tunes, so there is one parser, not two."""
+    from repro.integration.extract import EXTRACTABLE_OPS
+
+    seq = int(os.environ.get("REPRO_E2E_SEQ", "128"))
+    max_tasks = int(os.environ.get("REPRO_E2E_TASKS", "6"))
+    ops = tuple(
+        o.strip()
+        for o in os.environ.get("REPRO_E2E_OPS", "").split(",")
+        if o.strip()
+    ) or EXTRACTABLE_OPS
+    return _models(), seq, max_tasks, ops
 
 
 def _timed_forward(model, params, toks, ctx=None, repeats: int = 3):
@@ -102,12 +124,11 @@ def run(
         json_path = json_path.with_name(
             f"{json_path.stem}_{backend}{json_path.suffix}"
         )
-    max_tasks = int(os.environ.get("REPRO_E2E_TASKS", "6"))
-    seq = int(os.environ.get("REPRO_E2E_SEQ", "128"))
+    models, seq, max_tasks, ops = task_selection_env()
     repeats = int(os.environ.get("REPRO_E2E_REPEATS", "3"))
     rounds_per_task = max(trials // 8, 2)
     out: List[Dict] = []
-    for arch in _models():
+    for arch in models:
         cfg = get_config(arch)
         # 1. extract weighted tasks from the real model config.  Only
         # dispatchable sites: trials spent on layouts the model can't
@@ -115,7 +136,8 @@ def run(
         # the measured forward.  The attention score/value contractions
         # are dispatchable batch_matmul sites since the bmm_op hook.
         specs = extract_task_specs(
-            cfg, batch=1, seq=seq, max_tasks=max_tasks, dispatchable_only=True
+            cfg, batch=1, seq=seq, max_tasks=max_tasks, ops=ops,
+            dispatchable_only=True,
         )
         tasks = [s.to_tune_task(use_mxu=True) for s in specs]
         # 2. tune: warmup round-robin, then gradient allocation; round
@@ -123,23 +145,43 @@ def run(
         # through the selected lowering backend.
         per_round = min(8, max(trials, 1))
         db = Database(db_path)
-        from repro.search.measure import create_runner
+        # REPRO_E2E_SKIP_TUNED=1: tune only tasks without a database record
+        # — with a CI-cached database (see .github/workflows/ci.yml) an
+        # unchanged task set skips straight to dispatch instead of
+        # re-tuning identical tasks on every push
+        skip_tuned = os.environ.get("REPRO_E2E_SKIP_TUNED") == "1"
+        prior = {t.key: db.best(t.key) for t in tasks}
+        to_tune = [
+            t for t in tasks if not (skip_tuned and prior[t.key] is not None)
+        ]
+        rounds_run = 0
+        if to_tune:
+            from repro.search.measure import create_runner
 
-        runner_kwargs = {}
-        if os.environ.get("REPRO_TIMEOUT_S"):
-            runner_kwargs["timeout_s"] = float(os.environ["REPRO_TIMEOUT_S"])
-        sched = TaskScheduler(
-            tasks,
-            database=db,
-            config=SearchConfig(
-                max_trials=trials, init_random=per_round, population=12,
-                measure_per_round=per_round,
-            ),
-            runner=create_runner(runner_spec, backend=backend, **runner_kwargs),
-            backend=backend,
-        )
-        best = sched.tune(total_rounds=len(tasks) * rounds_per_task)
-        sched.runner.close()
+            runner_kwargs = {}
+            if os.environ.get("REPRO_TIMEOUT_S"):
+                runner_kwargs["timeout_s"] = float(
+                    os.environ["REPRO_TIMEOUT_S"]
+                )
+            sched = TaskScheduler(
+                to_tune,
+                database=db,
+                config=SearchConfig(
+                    max_trials=trials, init_random=per_round, population=12,
+                    measure_per_round=per_round,
+                ),
+                runner=create_runner(
+                    runner_spec, backend=backend, **runner_kwargs
+                ),
+                backend=backend,
+            )
+            sched.tune(total_rounds=len(to_tune) * rounds_per_task)
+            sched.runner.close()
+            rounds_run = sched.rounds_run
+        best = {}
+        for t in tasks:
+            rec = db.best(t.key)
+            best[t.key] = rec.latency_s if rec is not None else float("inf")
         # 3. dispatch: measure real forward passes, serving the *same*
         # backend-lowered artifacts the tuner measured.  Untuned and
         # tuned contexts cover the same key set (keys whose stored trace
@@ -183,8 +225,9 @@ def run(
         # "dispatched" = the tuned kernel was actually looked up (hit) at
         # forward trace time, not merely compiled — a hook that silently
         # stops consulting the context must fail the coverage gate
-        task_rows = [
-            {
+        task_rows = []
+        for s in specs:
+            trow = {
                 "key": s.key,
                 "op": s.op,
                 "weight": s.weight,
@@ -199,18 +242,33 @@ def run(
                     else None
                 ),
             }
-            for s in specs
-        ]
+            kern = tuned_ctx.kernel(s.key)
+            if kern is not None and kern.meta:
+                # lowering provenance: for attention this is where the
+                # tuned (block_q, block_kv) vs the pre-tuning fixed
+                # default becomes visible in the artifact
+                for mk in (
+                    "pallas_blocks_sampled",
+                    "pallas_blocks_snapped",
+                    "pallas_kernel",
+                ):
+                    if mk in kern.meta:
+                        trow[mk] = kern.meta[mk]
+            task_rows.append(trow)
         attn_total = sum(1 for t in task_rows if t["op"] == "batch_matmul")
         attn_disp = sum(
             1 for t in task_rows if t["op"] == "batch_matmul" and t["dispatched"]
+        )
+        fused_total = sum(1 for t in task_rows if t["op"] == "attention")
+        fused_disp = sum(
+            1 for t in task_rows if t["op"] == "attention" and t["dispatched"]
         )
         row = {
             "model": arch,
             "seq": seq,
             "backend": backend,
             "trials_per_task": trials,
-            "rounds_run": sched.rounds_run,
+            "rounds_run": rounds_run,
             "untuned_forward_ms": round(untuned_ms, 3),
             "tuned_forward_ms": round(tuned_ms, 3),
             "xla_forward_ms": round(xla_ms, 3),
@@ -219,6 +277,9 @@ def run(
             "dispatch_misses": misses,
             "attention_contractions": attn_total,
             "attention_contractions_dispatched": attn_disp,
+            "attention_fused_tasks": fused_total,
+            "attention_fused_dispatched": fused_disp,
+            "attention_tuned_hits": tuned_ctx.stats.get("attention_tuned", 0),
             "numerics_max_abs_err": round(max_err, 6),
             "numerics_rel_err": round(max_err / ref_scale, 6),
             "tasks": task_rows,
@@ -232,6 +293,7 @@ def run(
                 f"speedup={row['speedup']:.2f}x,"
                 f"hits={row['dispatch_hits']},"
                 f"attn_bmm_dispatched={attn_disp}/{attn_total},"
+                f"attn_fused_dispatched={fused_disp}/{fused_total},"
                 f"rel_err={row['numerics_rel_err']:.2e}"
             )
     payload = {

@@ -1,0 +1,65 @@
+"""Print a stable CI cache key for the tuned database.
+
+The end-to-end jobs cache ``results/tuning_db*.json`` between runs
+(``actions/cache``) so unchanged task sets skip re-tuning (the benchmark
+honors ``REPRO_E2E_SKIP_TUNED=1``).  The cache key must change exactly
+when the *tuning problem* changes, so it hashes:
+
+* the structural hashes of every extracted task (same env knobs as
+  ``end_to_end.py``: ``REPRO_E2E_MODELS`` / ``REPRO_E2E_SEQ`` /
+  ``REPRO_E2E_TASKS`` / ``REPRO_E2E_OPS``) — any workload, shape,
+  space, or extraction change reshuffles these;
+* the lowering backend (``REPRO_BACKEND`` / ``--backend``) — a jnp-tuned
+  record must never satisfy a pallas run.
+
+Usage (CI)::
+
+    KEY=$(PYTHONPATH=src python benchmarks/task_cache_key.py)
+    # -> e.g. tuned-db-pallas-1a2b3c4d5e6f
+
+Prints the key on stdout; everything else goes to stderr.
+"""
+
+import hashlib
+import sys
+
+from repro.backends.registry import resolve_backend_spec
+from repro.configs.base import get_config
+from repro.integration.extract import extract_task_specs
+
+
+def cache_key(backend: str = None) -> str:
+    # one env parser, shared with the benchmark itself: the cache key
+    # must hash exactly the task set end_to_end.run() will tune
+    try:
+        from benchmarks.end_to_end import task_selection_env
+    except ImportError:  # run as `python benchmarks/task_cache_key.py`
+        from end_to_end import task_selection_env
+
+    backend = resolve_backend_spec(backend)
+    models, seq, max_tasks, ops = task_selection_env()
+    h = hashlib.sha256()
+    h.update(backend.encode())
+    for arch in models:
+        specs = extract_task_specs(
+            get_config(arch), batch=1, seq=seq, max_tasks=max_tasks,
+            ops=ops, dispatchable_only=True,
+        )
+        for s in specs:
+            h.update(s.struct_hash.encode())
+            print(f"  {arch}: {s.key} [{s.struct_hash[:12]}]", file=sys.stderr)
+    return f"tuned-db-{backend}-{h.hexdigest()[:12]}"
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None)
+    args = ap.parse_args(argv)
+    print(cache_key(backend=args.backend))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,11 +3,9 @@ tune it with the learning-driven search (paper Figures 3 + 7 end-to-end).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core.workloads import gmm
 from repro.core.schedule import Schedule
-from repro.core.modules import SpaceGenerator, default_modules
 from repro.search.tune import tune_workload
 from repro.search.evolutionary import SearchConfig
 from repro.search.database import Database

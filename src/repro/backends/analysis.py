@@ -17,12 +17,11 @@ launch-time roofline analysis (EXPERIMENTS.md §Roofline).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 from ..core.schedule import BlockNode, LoopNode, Schedule
-from ..core.tir import REDUCE
 
 # TPU v5e hardware constants (per chip)
 PEAK_BF16_FLOPS = 197e12        # MXU bf16

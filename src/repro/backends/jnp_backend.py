@@ -21,9 +21,7 @@ correctness oracle and as the "default jnp" baseline in benchmarks.
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -29,17 +29,16 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import numpy as np
 
 from ..core.schedule import BlockNode, LoopNode, Schedule, iter_nodes
-from ..core.tir import PrimFunc, REDUCE, SPATIAL
-from ..core.trace import BlockRV
+from ..core.tir import PrimFunc
 from ..kernels.matmul import DEFAULT_BLOCKS
 from ..kernels.softmax import DEFAULT_ROW_BLOCK
 
 # PrimFunc names this backend can lower natively (dense_* covers every
-# epilogue variant, incl. fused_dense which instantiates dense_bias_gelu)
-_LOWERABLE_PREFIXES = ("dense_",)
+# epilogue variant, incl. fused_dense which instantiates dense_bias_gelu;
+# attention_* covers the causal/window/softcap variants)
+_LOWERABLE_PREFIXES = ("dense_", "attention_")
 _LOWERABLE_NAMES = ("batch_matmul", "sfm")
 
 
@@ -220,6 +219,74 @@ def lower_sfm(
     return fn, meta
 
 
+DEFAULT_ATTN_BLOCKS = (128, 128)  # MXU-native flash tiles (pre-tuning fixed)
+
+
+def _parse_attention_name(name: str):
+    """(causal, window, softcap) from ``attention_c{c}_w{w}[_t{cap}]``."""
+    causal, window, softcap = True, None, None
+    for part in name.split("_")[1:]:
+        if part.startswith("c"):
+            causal = bool(int(part[1:]))
+        elif part.startswith("w"):
+            window = int(part[1:]) or None
+        elif part.startswith("t"):
+            softcap = float(part[1:])
+    return causal, window, softcap
+
+
+def extract_attention_blocks(sch: Schedule) -> Optional[Tuple[int, int]]:
+    """(block_q, block_kv) = the (i, j) tile extents of the scores block."""
+    for n in iter_nodes(sch.root):
+        if isinstance(n, BlockNode) and n.block.name == "scores":
+            per_axis = _per_axis_tile(sch, n)
+            bq, bkv = per_axis.get("i", 1), per_axis.get("j", 1)
+            if bq == 1 and bkv == 1:
+                return None  # schedule carries no tile information
+            return (bq, bkv)
+    return None
+
+
+def lower_attention(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Tuned fused attention via the Pallas flash kernel.
+
+    The schedule's sampled (i, j) tiles of the ``scores`` block become the
+    flash kernel's (block_q, block_kv), snapped to divisors of the
+    sequence length — the same sampled-vs-snapped provenance contract as
+    the matmul tiles.
+    """
+    from ..kernels.flash_attention import flash_attention
+
+    func = sch.func
+    Q = func.inputs[0]
+    b, kvh, g, s, d = Q.shape
+    causal, window, softcap = _parse_attention_name(func.name)
+    sampled = extract_attention_blocks(sch)
+    blocks = snap_blocks((s, s), sampled or DEFAULT_ATTN_BLOCKS)
+    bq, bkv = blocks
+    _check_grid(b * kvh * g * (s // bq) * (s // bkv), blocks)
+    meta = _block_meta("flash_attention", sampled, blocks)
+
+    def fn(inputs: Dict):
+        q = inputs["Q"].reshape(b, kvh * g, s, d)
+        out = flash_attention(
+            q,
+            inputs["K"],
+            inputs["V"],
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            block_q=bq,
+            block_kv=bkv,
+            interpret=interpret,
+        )
+        return {func.outputs[0].name: out.reshape(b, kvh, g, s, d)}
+
+    return fn, meta
+
+
 def _block_meta(kernel: str, sampled, snapped) -> Dict[str, Any]:
     meta: Dict[str, Any] = {
         "pallas_kernel": kernel,
@@ -246,6 +313,8 @@ def lower_to_pallas(
     name = sch.func.name
     if name.startswith("dense_"):
         return lower_dense(sch, interpret=interpret)
+    if name.startswith("attention_"):
+        return lower_attention(sch, interpret=interpret)
     if name == "batch_matmul":
         return lower_batch_matmul(sch, interpret=interpret)
     if name == "sfm":
@@ -264,12 +333,6 @@ def lower_dense_to_pallas(
 
 
 def _best_divisor(n: int, target: int) -> int:
-    best, bd = 1, abs(target - 1)
-    d = 1
-    while d * d <= n:
-        if n % d == 0:
-            for c in (d, n // d):
-                if abs(c - target) < bd:
-                    best, bd = c, abs(c - target)
-        d += 1
-    return best
+    from ..kernels.flash_attention import best_divisor
+
+    return best_divisor(n, target)

@@ -171,15 +171,15 @@ class PallasBackend(Backend):
         """Fused flash-attention (Pallas kernel) for the dispatch layer's
         attention hook; see :meth:`DispatchContext.attention`.
 
-        Block sizes are this backend's concern: snapped to the largest
-        divisor of the sequence length <= the MXU-native 128 tile.
-        (Tuning (bq, bkv) from traces like the matmul tiles is a ROADMAP
-        item — needs an ``attention`` workload.)
+        This is the *untuned* fallback: when the database holds a tuned
+        ``attention`` record the dispatch layer serves the fully-lowered
+        kernel (db-tuned blocks) and never reaches here.  Blocks snap to
+        the largest divisor of the sequence length <= the MXU-native 128
+        tile — the pre-tuning fixed default.
         """
-        from ..kernels.flash_attention import flash_attention
-        from .pallas_backend import _best_divisor
+        from ..kernels.flash_attention import best_divisor, flash_attention
 
-        bq = _best_divisor(int(q.shape[2]), 128)
+        bq = best_divisor(int(q.shape[2]), 128)
         return flash_attention(
             q, k, v, block_q=bq, block_kv=bq, interpret=self.interpret,
             **kwargs,

@@ -9,7 +9,7 @@ launchers resolves through :func:`get_config`.
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 

@@ -20,12 +20,11 @@ The library mirrors the paper's modules, adapted to TPU (DESIGN.md §3):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
-import numpy as np
 
-from .schedule import BlockNode, LoopNode, Schedule, iter_nodes
+from .schedule import LoopNode, Schedule
 from .tir import REDUCE, SPATIAL, ScheduleError
 from .trace import BlockRV, LoopRV
 from .schedule import _is_matmul_pattern

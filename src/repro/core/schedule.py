@@ -16,7 +16,6 @@ Random variables are handles: :class:`BlockRV` (resolved by block name),
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -26,29 +25,17 @@ from .tir import (
     Axis,
     Block,
     Buffer,
-    Const,
     Expr,
     LinExpr,
     Load,
     PrimFunc,
-    REDUCE,
     SPATIAL,
     ScheduleError,
     Select,
     Term,
     UnOp,
-    as_linexpr,
 )
-from .trace import (
-    BlockRV,
-    ExprRV,
-    INLINE_LOOP,
-    Instruction,
-    LoopRV,
-    ROOT_LOOP,
-    Trace,
-    new_expr_rv,
-)
+from .trace import BlockRV, ExprRV, Instruction, LoopRV, Trace, new_expr_rv
 
 RVLike = Union[BlockRV, LoopRV, ExprRV, int, str, None]
 

@@ -18,8 +18,8 @@ every downstream use.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Union
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Union
 
 # ---------------------------------------------------------------------------
 # Random-variable handles

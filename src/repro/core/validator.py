@@ -11,11 +11,11 @@ proposes freely and this validator rejects out-of-support samples.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
-from .schedule import BlockNode, LoopNode, Schedule, iter_nodes
+from .schedule import LoopNode, Schedule
 from .tir import PrimFunc
 from .trace import Trace
 

@@ -12,7 +12,7 @@ search database under that key.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 from .tir import (
     Axis,
@@ -25,11 +25,9 @@ from .tir import (
     Load,
     PrimFunc,
     REDUCE,
-    SPATIAL,
     Select,
     UnOp,
     add,
-    as_linexpr,
     const,
     load,
     mul,
@@ -737,6 +735,153 @@ def rmsnorm(
     return PrimFunc("rmsnorm", (X, W), (Y,), (sumsq, scale))
 
 
+@register("attention")
+def attention(
+    b: int = 1,
+    h: int = 4,
+    kvh: int = 0,
+    s: int = 128,
+    d: int = 64,
+    causal: int = 1,
+    window: int = 0,
+    softcap: float = 0.0,
+    dtype: str = "float32",
+) -> PrimFunc:
+    """Fused scaled-dot-product attention — the model-integration workload.
+
+    GQA layout: Q is (b, kvh, g, s, d) with g = h // kvh query heads per
+    kv head, K/V are (b, kvh, s, d) — the canonical grouping the model's
+    attention hook reshapes into, so no head repetition is materialized
+    and every load is a plain axis index (schedulable by the generic
+    modules).  Blocks: scores (matmul), scale/softcap + mask, the 4-block
+    row softmax, and the value contraction (matmul).
+
+    Masking is part of the program, not a runtime flag: ``window > 0``
+    bakes a sliding-window causal mask (``0 <= i - j < window``),
+    ``causal`` alone a triangular mask (``0 <= i - j < s``), neither a
+    mask-free global program.  ``softcap > 0`` adds the gemma-2 logit
+    cap.  The variant is encoded in the PrimFunc name
+    (``attention_c{causal}_w{window}[_t{softcap}]``) so backends can
+    recover it from a bare Schedule.
+
+    The tunable payload: the (i, j) tile extents of the ``scores`` block
+    are the flash-attention ``(block_q, block_kv)`` — the Pallas backend
+    reads them off the tuned trace exactly like the matmul (bm, bn, bk).
+    """
+    kvh = int(kvh) or int(h)
+    if h % kvh:
+        raise ValueError(f"attention: h={h} not divisible by kvh={kvh}")
+    g = h // kvh
+    scale = 1.0 / float(d) ** 0.5
+    softcap = float(softcap)
+    Q = Buffer("Q", (b, kvh, g, s, d), dtype)
+    K = Buffer("K", (b, kvh, s, d), dtype)
+    V = Buffer("V", (b, kvh, s, d), dtype)
+    S = Buffer("S", (b, kvh, g, s, s), dtype)
+    spatial = (Axis("bb", b), Axis("kv", kvh), Axis("gg", g), Axis("i", s))
+    scores = Block(
+        name="scores",
+        axes=spatial + (Axis("j", s), Axis("dd", d, REDUCE)),
+        expr=mul(
+            load(Q, "bb", "kv", "gg", "i", "dd"), load(K, "bb", "kv", "j", "dd")
+        ),
+        write=S,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i"), _v("j")),
+        reduce_op="add",
+    )
+    if softcap:
+        scored: Expr = mul(
+            const(softcap),
+            UnOp(
+                "tanh",
+                mul(load(S, "bb", "kv", "gg", "i", "j"), const(scale / softcap)),
+            ),
+        )
+    else:
+        scored = mul(load(S, "bb", "kv", "gg", "i", "j"), const(scale))
+    span = int(window) if window else (s if causal else 0)
+    if span:
+        masked: Expr = Select(
+            bounds=((_v("i") - _v("j"), span),), a=scored, b=Const(-1e30)
+        )
+    else:
+        masked = scored
+    M = Buffer("M", (b, kvh, g, s, s), dtype)
+    mask_blk = Block(
+        name="mask",
+        axes=spatial + (Axis("j", s),),
+        expr=masked,
+        write=M,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i"), _v("j")),
+    )
+    Mx = Buffer("rowmax", (b, kvh, g, s), dtype)
+    E = Buffer("expv", (b, kvh, g, s, s), dtype)
+    Sm = Buffer("rowsum", (b, kvh, g, s), dtype)
+    P = Buffer("P", (b, kvh, g, s, s), dtype)
+    O = Buffer("O", (b, kvh, g, s, d), dtype)
+    rowmax = Block(
+        name="rowmax",
+        axes=spatial + (Axis("j", s, REDUCE),),
+        expr=load(M, "bb", "kv", "gg", "i", "j"),
+        write=Mx,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i")),
+        reduce_op="max",
+        init=-1e30,
+    )
+    expv = Block(
+        name="expv",
+        axes=spatial + (Axis("j", s),),
+        expr=UnOp(
+            "exp",
+            BinOp(
+                "sub",
+                load(M, "bb", "kv", "gg", "i", "j"),
+                load(Mx, "bb", "kv", "gg", "i"),
+            ),
+        ),
+        write=E,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i"), _v("j")),
+    )
+    rowsum = Block(
+        name="rowsum",
+        axes=spatial + (Axis("j", s, REDUCE),),
+        expr=load(E, "bb", "kv", "gg", "i", "j"),
+        write=Sm,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i")),
+        reduce_op="add",
+    )
+    divide = Block(
+        name="divide",
+        axes=spatial + (Axis("j", s),),
+        expr=BinOp(
+            "div",
+            load(E, "bb", "kv", "gg", "i", "j"),
+            load(Sm, "bb", "kv", "gg", "i"),
+        ),
+        write=P,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i"), _v("j")),
+    )
+    out = Block(
+        name="out",
+        axes=spatial + (Axis("d2", d), Axis("j", s, REDUCE)),
+        expr=mul(
+            load(P, "bb", "kv", "gg", "i", "j"), load(V, "bb", "kv", "j", "d2")
+        ),
+        write=O,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("i"), _v("d2")),
+        reduce_op="add",
+    )
+    name = f"attention_c{int(bool(causal))}_w{int(window)}"
+    if softcap:
+        name += f"_t{softcap:g}"
+    return PrimFunc(
+        name,
+        (Q, K, V),
+        (O,),
+        (scores, mask_blk, rowmax, expv, rowsum, divide, out),
+    )
+
+
 @register("fused_dense")
 def fused_dense(
     m: int = 128, n: int = 3072, k: int = 768, dtype: str = "float32"
@@ -780,4 +925,5 @@ REDUCED_KWARGS: Dict[str, Dict] = {
     "batch_matmul": dict(b=2, m=16, n=16, k=16),
     "fused_dense": dict(m=32, n=64, k=32),
     "rmsnorm": dict(tokens=16, d=32),
+    "attention": dict(b=1, h=2, kvh=1, s=16, d=8),
 }

@@ -15,11 +15,11 @@ step/shard addressing and resume semantics stay identical.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 
 
 @dataclass

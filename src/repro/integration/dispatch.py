@@ -114,7 +114,10 @@ class DispatchContext:
         self.backend = resolve_backend_spec(backend)
         get_backend(self.backend)
         self.stats: Dict[str, int] = {
-            "hits": 0, "misses": 0, "attention_fused": 0,
+            "hits": 0,
+            "misses": 0,
+            "attention_fused": 0,
+            "attention_tuned": 0,
         }
         self.hits_by_key: Dict[str, int] = {}
         self._funcs: Dict[str, PrimFunc] = {}
@@ -177,7 +180,9 @@ class DispatchContext:
             mxu = self._task_mxu[key]
         else:
             name, _ = parse_workload_key(key)
-            mxu = self.use_mxu and name in ("dense", "batch_matmul", "gmm")
+            mxu = self.use_mxu and name in (
+                "dense", "batch_matmul", "gmm", "attention",
+            )
         space = SpaceGenerator(default_modules(use_mxu=mxu))
         sch = first_valid_schedule(func, space, self.default_seed_scan)
         if sch is None:
@@ -234,14 +239,29 @@ class DispatchContext:
         self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
         return kern
 
-    def dense(self, x: jnp.ndarray, w: jnp.ndarray) -> Optional[jnp.ndarray]:
-        """Tuned ``x @ w`` over the last dim of x; None -> caller falls back."""
-        if x.ndim < 1 or w.ndim != 2 or x.shape[-1] != w.shape[0]:
+    def dense(
+        self, x: jnp.ndarray, w: jnp.ndarray, transpose_w: bool = False
+    ) -> Optional[jnp.ndarray]:
+        """Tuned ``x @ w`` over the last dim of x; None -> caller falls back.
+
+        ``transpose_w=True`` serves a weight stored (n, k) — the
+        tied-embedding unembed ``bsd,vd->bsv`` — by transposing at load:
+        the same tuned ``dense`` (m, n, k) kernel runs, and the transpose
+        folds into the jitted graph (XLA fuses it into the operand read).
+        """
+        if x.ndim < 1 or w.ndim != 2:
             return None
+        if transpose_w:
+            if x.shape[-1] != w.shape[1]:
+                return None
+            n, k = int(w.shape[0]), int(w.shape[1])
+        else:
+            if x.shape[-1] != w.shape[0]:
+                return None
+            k, n = int(w.shape[0]), int(w.shape[1])
         m = 1
         for s in x.shape[:-1]:
             m *= int(s)
-        k, n = int(w.shape[0]), int(w.shape[1])
         kern = self._lookup(workload_key("dense", m=m, n=n, k=k))
         if kern is None:
             return None
@@ -256,7 +276,10 @@ class DispatchContext:
 
             kern.grad_fn = _with_reference_grad(fwd_kernel, ref)
         x2 = x.reshape(m, k).astype(jnp.float32)
-        out = kern.grad_fn(x2, w.astype(jnp.float32))
+        w2 = w.astype(jnp.float32)
+        if transpose_w:
+            w2 = w2.T  # (n, k) -> (k, n); VJP flows through the transpose
+        out = kern.grad_fn(x2, w2)
         return out.reshape(*x.shape[:-1], n).astype(x.dtype)
 
     def batch_matmul(
@@ -307,44 +330,91 @@ class DispatchContext:
         scale: Optional[float] = None,
         q_offset: int = 0,
     ) -> Optional[jnp.ndarray]:
-        """Fused flash-attention through the active backend, if it serves
-        one (the Pallas backend does; jnp has no fused path).
+        """Fused attention with database-tuned ``(block_q, block_kv)``.
+
+        Lookup order: (1) a tuned ``attention`` workload record keyed by
+        ``(b, h, kvh, s, d, causal, window, softcap)`` — the backend
+        lowers the db-best trace, so the blocks are the search's, not a
+        hardcoded default; (2) the backend's default fused path (the
+        pre-tuning fixed blocks), when it serves one.
 
         Only static configurations are fusable: a traced ``window`` (the
         per-layer scan metadata) or a nonzero ``q_offset`` (decode) falls
         back to the layer's chunked online-softmax path.  Backward runs
         the reference-attention VJP, like every other dispatched kernel.
         """
-        be = get_backend(self.backend)
-        fused = getattr(be, "fused_attention", None)
-        if fused is None:
-            return None
         if isinstance(q_offset, jax.core.Tracer) or q_offset != 0:
-            return None
-        if window is not None:
-            if isinstance(window, jax.core.Tracer):
-                return None
-            w = int(window)
-            window = None if w <= 0 else w  # 0 = global attention
-        if softcap is not None and isinstance(softcap, jax.core.Tracer):
             return None
         B, H, S, D = (int(s) for s in q.shape)
         KVH, T = int(k.shape[1]), int(k.shape[2])
         if v.shape != k.shape or T != S or H % KVH != 0:
             return None
-
-        def kernel_fn(q2, k2, v2):
-            # block sizes are the backend's concern, not the dispatch
-            # layer's — it picks/snaps tiles for its own hardware
-            return fused(
-                q2, k2, v2, causal=causal, window=window, softcap=softcap,
-                scale=scale,
-            )
+        if window is not None:
+            if isinstance(window, jax.core.Tracer):
+                return None
+            w = int(window)
+            # 0 = global; a window covering the whole sequence is global
+            # too — the canonical form the extracted task keys use
+            window = None if (w <= 0 or w >= S) else w
+        if softcap is not None and isinstance(softcap, jax.core.Tracer):
+            return None
 
         def ref(q2, k2, v2):
             from ..kernels import ref as kref
 
             return kref.flash_attention(
+                q2, k2, v2, causal=causal, window=window, softcap=softcap,
+                scale=scale,
+            )
+
+        # (1) tuned workload record — only the workload's own scale (the
+        # 1/sqrt(d) every model path uses) and causal windows are keyed
+        default_scale = scale is None or abs(scale - D**-0.5) < 1e-12
+        if default_scale and not (window is not None and not causal):
+            key = workload_key(
+                "attention", b=B, h=H, kvh=KVH, s=S, d=D,
+                causal=int(bool(causal)), window=int(window or 0),
+                softcap=float(softcap or 0.0),
+            )
+            kern = self.kernel(key)
+            if kern is not None and not _attention_kern_servable(
+                kern, B, H, S
+            ):
+                kern = None  # structural lowering too large to serve
+            if kern is None:
+                self.stats["misses"] += 1
+            else:
+                self.stats["hits"] += 1
+                self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
+                G = H // KVH
+                if kern.grad_fn is None:
+                    def fwd_kernel(q5, k2, v2):
+                        return kern.fn({"Q": q5, "K": k2, "V": v2})[
+                            kern.out_name
+                        ]
+
+                    def ref5(q5, k2, v2):
+                        out = ref(q5.reshape(B, H, S, D), k2, v2)
+                        return out.reshape(B, KVH, G, S, D)
+
+                    kern.grad_fn = _with_reference_grad(fwd_kernel, ref5)
+                self.stats["attention_tuned"] += 1
+                q5 = q.reshape(B, KVH, G, S, D).astype(jnp.float32)
+                out = kern.grad_fn(
+                    q5, k.astype(jnp.float32), v.astype(jnp.float32)
+                )
+                return out.reshape(B, H, S, D).astype(q.dtype)
+
+        # (2) backend default fused path (fixed pre-tuning blocks)
+        be = get_backend(self.backend)
+        fused = getattr(be, "fused_attention", None)
+        if fused is None:
+            return None
+
+        def kernel_fn(q2, k2, v2):
+            # block sizes are the backend's concern here: it picks/snaps
+            # its own default tiles for untuned shapes
+            return fused(
                 q2, k2, v2, causal=causal, window=window, softcap=softcap,
                 scale=scale,
             )
@@ -377,6 +447,21 @@ class DispatchContext:
         x2 = x.reshape(tokens, d).astype(jnp.float32)
         out = kern.grad_fn(x2, w.astype(jnp.float32))
         return out.reshape(x.shape).astype(x.dtype)
+
+
+# A structurally-lowered (non-fused) attention kernel materializes the
+# (b, h, s, s) score/softmax buffers the chunked online-softmax path
+# exists to avoid; serve it only while that footprint stays modest.  The
+# fused flash lowering streams kv blocks and has no such limit.
+MAX_STRUCTURAL_ATTN_SCORE_BYTES = 256 << 20
+
+
+def _attention_kern_servable(
+    kern: CompiledKernel, b: int, h: int, s: int
+) -> bool:
+    if kern.meta and kern.meta.get("pallas_kernel") == "flash_attention":
+        return True
+    return 4 * b * h * s * s <= MAX_STRUCTURAL_ATTN_SCORE_BYTES
 
 
 def _with_reference_grad(kernel_fn: Callable, ref_fn: Callable) -> Callable:

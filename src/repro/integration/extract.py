@@ -25,7 +25,8 @@ tuned traces back into the model by the same workload keys.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -39,7 +40,7 @@ from ..search.task_scheduler import TuneTask
 TOKEN_TILE = 128  # default representative token block (batch=1 x seq=128)
 
 # ops the extractor understands; everything else is skipped
-EXTRACTABLE_OPS = ("dense", "batch_matmul", "rmsnorm", "sfm")
+EXTRACTABLE_OPS = ("dense", "batch_matmul", "rmsnorm", "sfm", "attention")
 
 
 @dataclass
@@ -75,8 +76,140 @@ class ExtractedTask:
 
     def to_tune_task(self, use_mxu: bool = True) -> TuneTask:
         func = get_workload(self.op, **self.kwargs)
-        mxu = use_mxu and self.op in ("dense", "batch_matmul")
+        mxu = use_mxu and self.op in ("dense", "batch_matmul", "attention")
         return TuneTask(key=self.key, func=func, weight=self.weight, use_mxu=mxu)
+
+
+# ---------------------------------------------------------------------------
+# Attention-site recording (trace-time hook)
+# ---------------------------------------------------------------------------
+
+_REC_TLS = threading.local()
+
+
+def current_attention_recorder() -> Optional["AttentionSiteRecorder"]:
+    """The active recorder, read by ``models.layers.chunked_attention``."""
+    stack = getattr(_REC_TLS, "stack", None)
+    return stack[-1] if stack else None
+
+
+@dataclass
+class AttentionSiteRecorder:
+    """Collects fused-attention call sites while the model traces.
+
+    Attention is one whole-subgraph workload, not a single jaxpr
+    primitive — the chunked online-softmax lowering scatters it over a
+    scan of contractions — so instead of pattern-matching the jaxpr, the
+    attention hook in the model layers reports its static call
+    configuration here during the same ``jax.make_jaxpr`` trace the
+    primitive walk uses.  One record per *traced* call; scan multiplicity
+    is restored from the config's static window pattern (see
+    :func:`attention_sites`).
+    """
+
+    sites: List[Dict[str, Any]] = field(default_factory=list)
+
+    def add(
+        self, *, q_shape, kvh, kv_seq, causal, window, softcap, scale, q_offset
+    ) -> None:
+        traced = jax.core.Tracer
+        self.sites.append(
+            dict(
+                q_shape=tuple(int(x) for x in q_shape),
+                kvh=int(kvh),
+                kv_seq=int(kv_seq),
+                causal=bool(causal),
+                window=(
+                    "traced" if isinstance(window, traced)
+                    else (int(window) if window is not None else 0)
+                ),
+                softcap=(
+                    "traced" if isinstance(softcap, traced)
+                    else (float(softcap) if softcap else 0.0)
+                ),
+                scale=(None if scale is None else float(scale)),
+                q_offset=(
+                    "traced" if isinstance(q_offset, traced) else int(q_offset)
+                ),
+            )
+        )
+
+    def __enter__(self) -> "AttentionSiteRecorder":
+        stack = getattr(_REC_TLS, "stack", None)
+        if stack is None:
+            stack = _REC_TLS.stack = []
+        stack.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _REC_TLS.stack.pop()
+
+
+def attention_sites(
+    cfg: ModelConfig, recorded: List[Dict[str, Any]]
+) -> List[TaskSite]:
+    """Weighted attention TaskSites from trace-time records.
+
+    Each record is one traced call; a periodic-window layer scan traces
+    its body once, so the true occurrence count of a causal record with
+    static window ``w`` is the number of layers carrying that window
+    (split across the records that share it).  Records the workload
+    cannot express — traced window/softcap (aperiodic patterns), decode
+    offsets, non-square kv, non-default scale — are skipped: those sites
+    keep the chunked path, whose contractions are extracted as
+    ``batch_matmul`` tasks anyway.
+    """
+    from ..models.transformer import layer_windows
+
+    windows = layer_windows(cfg)
+    rec_by_window: Dict[int, int] = {}
+    for r in recorded:
+        if r["causal"] and isinstance(r["window"], int):
+            w = r["window"]
+            if w >= r["q_shape"][2]:
+                w = 0  # window >= seq is global (canonical form)
+            rec_by_window[w] = rec_by_window.get(w, 0) + 1
+    sites: List[TaskSite] = []
+    for r in recorded:
+        if "traced" in (r["window"], r["softcap"], r["q_offset"]):
+            continue
+        if r["q_offset"] != 0:
+            continue
+        B, H, S, D = r["q_shape"]
+        KVH = r["kvh"]
+        if r["kv_seq"] != S or H % KVH != 0:
+            continue  # cross-attention (S != T) / ragged GQA: chunked path
+        if r["scale"] is not None and abs(r["scale"] - D**-0.5) > 1e-12:
+            continue
+        w = r["window"]
+        if w and not r["causal"]:
+            continue  # the workload's window mask implies causality
+        if w >= S:
+            w = 0  # a window covering the whole sequence IS global
+        if r["causal"]:
+            total = sum(
+                1
+                for lw in windows
+                if (int(lw) if int(lw) < S else 0) == w
+            )
+            n_rec = rec_by_window.get(w, 1)
+            weight = total / n_rec if total else 1.0
+        else:
+            # encoder self-attention: one record per enc-scan body trace
+            weight = float(cfg.enc_layers or 1)
+        sites.append(
+            TaskSite(
+                "attention",
+                dict(
+                    b=B, h=H, kvh=KVH, s=S, d=D,
+                    causal=int(r["causal"]), window=int(w),
+                    softcap=float(r["softcap"]),
+                ),
+                weight,
+                dispatchable=True,
+            )
+        )
+    return sites
 
 
 # ---------------------------------------------------------------------------
@@ -147,12 +280,13 @@ def _dot_site(eqn) -> Optional[TaskSite]:
         return TaskSite(
             "batch_matmul", dict(b=b, m=m, n=n, k=k), 1.0, dispatchable=disp
         )
-    # the dense dispatch hook serves x(..., k) @ w(k, n): lhs contracts its
-    # trailing dims, the 2-D rhs contracts dim 0.  Anything else (e.g. the
-    # tied-embedding unembed with w stored (n, k)) tunes but can't swap in.
+    # the dense dispatch hook serves x(..., k) @ w(k, n), and — via
+    # transpose-at-load — x(..., k) @ wT(n, k): the tied-embedding unembed
+    # ``bsd,vd->bsv``.  Either way the lhs contracts its trailing dims and
+    # the 2-D rhs contracts exactly one dim.
     disp = (
         len(rhs) == 2
-        and tuple(rc) == (0,)
+        and tuple(rc) in ((0,), (1,))
         and tuple(lc) == tuple(range(len(lhs) - len(lc), len(lhs)))
     )
     return TaskSite("dense", dict(m=m, n=n, k=k), 1.0, dispatchable=disp)
@@ -215,6 +349,9 @@ def _task_flops(op: str, kw: Dict[str, Any]) -> int:
         return 4 * kw["tokens"] * kw["d"]
     if op == "sfm":
         return 8 * kw["m"] * kw["n"]
+    if op == "attention":
+        # scores + value contractions (softmax flops are second-order)
+        return 4 * kw["b"] * kw["h"] * kw["s"] * kw["s"] * kw["d"]
     return 0
 
 
@@ -307,20 +444,30 @@ def extract_task_specs(
     dispatchable_only: bool = False,
 ) -> List[ExtractedTask]:
     """Like :func:`extract_tasks` but returns the rich task records."""
-    jaxpr = model_forward_jaxpr(cfg, batch=batch, seq=seq)
-    sites = [
-        s
-        for s in sites_from_jaxpr(
-            jaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps
-        )
-        if s.op in ops
-    ]
+    recorder = AttentionSiteRecorder()
+    with recorder:
+        jaxpr = model_forward_jaxpr(cfg, batch=batch, seq=seq)
+    sites = sites_from_jaxpr(jaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps)
+    sites += attention_sites(cfg, recorder.sites)
+    sites = [s for s in sites if s.op in ops]
     if dispatchable_only:
         sites = [s for s in sites if s.dispatchable]
     tasks = dedup_sites(sites, min_task_elems=min_task_elems)
     if max_tasks > 0 and len(tasks) > max_tasks:
         dropped = tasks[max_tasks:]
         tasks = tasks[:max_tasks]
+        # the weight x flops ranking undervalues attention (its cost is
+        # softmax + memory traffic, not just matmul flops), and it is the
+        # one op class whose blocks only tune through its own task — keep
+        # the heaviest attention task alive under the cap
+        if (
+            "attention" in ops
+            and any(d.op == "attention" for d in dropped)
+            and not any(t.op == "attention" for t in tasks)
+        ):
+            kept_attn = next(d for d in dropped if d.op == "attention")
+            dropped = [d for d in dropped if d is not kept_attn]
+            tasks[-1], dropped = kept_attn, dropped + [tasks[-1]]
         # no silent caps: record what fell off the end
         import logging
 

@@ -24,6 +24,19 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def best_divisor(n: int, target: int) -> int:
+    """Divisor of ``n`` nearest to ``target`` (Pallas needs exact tiling)."""
+    best, bd = 1, abs(target - 1)
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            for c in (d, n // d):
+                if abs(c - target) < bd:
+                    best, bd = c, abs(c - target)
+        d += 1
+    return best
+
+
 def _attn_kernel(
     q_ref,
     k_ref,
@@ -98,9 +111,11 @@ def flash_attention(
     KVH = k.shape[1]
     G = H // KVH
     scale = scale if scale is not None else 1.0 / (D**0.5)
-    bq = min(block_q, S)
-    bkv = min(block_kv, S)
-    assert S % bq == 0 and S % bkv == 0
+    # snap requested blocks to divisors of S: BlockSpecs need exact tiling,
+    # and tuned (block_q, block_kv) may come from a trace sampled on a
+    # different-shaped relative of this call
+    bq = best_divisor(S, min(block_q, S))
+    bkv = best_divisor(S, min(block_kv, S))
     nq, nkv = S // bq, S // bkv
     kernel = functools.partial(
         _attn_kernel,

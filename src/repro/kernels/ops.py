@@ -10,10 +10,8 @@ tuning database by workload key (DESIGN.md §4, paper Appendix A.6).
 from __future__ import annotations
 
 import os
-from functools import partial
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from . import flash_attention as _fa

@@ -26,13 +26,12 @@ import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ARCHS, SHAPES, ShapeConfig, cell_supported, get_config
+from ..configs.base import ARCHS, SHAPES, cell_supported, get_config
 from ..distributed import sharding as shd
 from ..models import registry as R
 from ..models.registry import build_model

@@ -12,22 +12,18 @@ LATEST, straggler detection on step times.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..configs.base import ARCHS, ShapeConfig, get_config
+from ..configs.base import ARCHS, get_config
 from ..data.pipeline import SyntheticTokenPipeline
-from ..distributed import sharding as shd
 from ..models.registry import build_model
 from ..training import checkpoint as ckpt
 from ..training.fault_tolerance import StragglerDetector, retry
 from ..training.optimizer import OptConfig, adamw_init
 from ..training.train_loop import make_train_step
-from .mesh import make_host_mesh
 
 
 def main(argv=None):

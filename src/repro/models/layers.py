@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import math
 import sys
-from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
@@ -37,6 +36,16 @@ def _dispatch_ctx():
     """
     mod = sys.modules.get("repro.integration.dispatch")
     return mod.current() if mod is not None else None
+
+
+def _attn_recorder():
+    """Active attention-site recorder (task extraction), or None.
+
+    Same ``sys.modules`` pattern as :func:`_dispatch_ctx`: a recorder can
+    only be active while ``repro.integration.extract`` traces the model.
+    """
+    mod = sys.modules.get("repro.integration.extract")
+    return mod.current_attention_recorder() if mod is not None else None
 
 
 def dense_op(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -187,6 +196,13 @@ def chunked_attention(
     (static window/offset only), and otherwise the score and value
     contractions route through :func:`bmm_op` so tuned ``batch_matmul``
     records swap into the online-softmax scan."""
+    rec = _attn_recorder()
+    if rec is not None:
+        rec.add(
+            q_shape=tuple(q.shape), kvh=int(k.shape[1]), kv_seq=int(k.shape[2]),
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset,
+        )
     ctx = _dispatch_ctx()
     if ctx is not None:
         fused = ctx.attention(
@@ -557,4 +573,12 @@ def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
 
 
 def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Tied-embedding unembed ``bsd,vd->bsv`` — a transposed-weight
+    dispatch point: the table is stored (vocab, d), so a tuned ``dense``
+    record for (m, n=vocab, k=d) serves it via transpose-at-load."""
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        out = ctx.dense(x, table, transpose_w=True)
+        if out is not None:
+            return out
     return jnp.einsum("bsd,vd->bsv", x, table)

@@ -10,7 +10,7 @@ precomputed frame embeddings, qwen2-vl precomputed patch/text embeddings.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

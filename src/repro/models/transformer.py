@@ -21,7 +21,6 @@ through the scan as a traced (L,) metadata array.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -118,6 +117,38 @@ def layer_windows(cfg: ModelConfig) -> np.ndarray:
     else:
         w = [0] * Ln
     return np.asarray(w, dtype=np.int32)
+
+
+# Largest per-scan-step unroll we accept to keep windows static: a period-p
+# pattern scans L/p steps of a p-layer body, so HLO stays O(p) in depth.
+MAX_WINDOW_PERIOD = 4
+
+
+def window_period(windows: np.ndarray, max_period: int = MAX_WINDOW_PERIOD):
+    """Smallest period ``p <= max_period`` of the window pattern, or None.
+
+    ``p`` divides the layer count and ``windows[i] == windows[i % p]`` for
+    all i — uniform models give 1, gemma-2 local/global alternation 2.
+    None means the pattern is aperiodic (hymba's {first, mid, last}
+    globals) and the caller must fall back to tracing the window through
+    the scan carry (which disables fused-attention dispatch: the hook
+    only serves static windows).
+    """
+    Ln = len(windows)
+    for p in range(1, min(max_period, Ln) + 1):
+        if Ln % p == 0 and all(
+            int(windows[i]) == int(windows[i % p]) for i in range(Ln)
+        ):
+            return p
+    return None
+
+
+def _stack_period(layers: PyTree, period: int) -> PyTree:
+    """Reshape stacked (L, ...) params to (L/p, p, ...) for a periodic scan."""
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((a.shape[0] // period, period) + a.shape[1:]),
+        layers,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -268,18 +299,48 @@ def forward(
         else None
     )
 
-    def step(carry, inp):
-        p, w = inp
-        x = carry
-        x, _, _, _ = _layer_fwd(cfg, p, x, pos, w, cross_fn=cross)
-        return x, None
+    # Static-window scan: when the per-layer window pattern is periodic the
+    # window reaches each layer as a Python int closed over the scan body
+    # (the attention dispatch hook needs a concrete value to serve the
+    # fused kernel); only aperiodic patterns trace it through the scan.
+    period = window_period(windows)
+    if period is None:
+
+        def step(carry, inp):
+            p, w = inp
+            x = carry
+            x, _, _, _ = _layer_fwd(cfg, p, x, pos, w, cross_fn=cross)
+            return x, None
+
+        xs = (params["layers"], windows)
+    else:
+        win_static = [int(windows[j]) or None for j in range(period)]
+
+        def step(carry, lp):
+            x = carry
+            for j in range(period):
+                pj = (
+                    jax.tree_util.tree_map(lambda a, j=j: a[j], lp)
+                    if period > 1
+                    else lp
+                )
+                x, _, _, _ = _layer_fwd(
+                    cfg, pj, x, pos, win_static[j], cross_fn=cross
+                )
+            return x, None
+
+        xs = (
+            params["layers"]
+            if period == 1
+            else _stack_period(params["layers"], period)
+        )
 
     if remat:
         # save only layer boundaries; recompute internals in backward
         step = jax.checkpoint(
             step, policy=jax.checkpoint_policies.nothing_saveable
         )
-    x, _ = jax.lax.scan(step, x, (params["layers"], windows))
+    x, _ = jax.lax.scan(step, x, xs)
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = L.unembed(x, params["embed"])
     if cfg.logit_softcap:
@@ -378,9 +439,7 @@ def prefill(
         else None
     )
 
-    def step(carry, inp):
-        p, w = inp
-        x = carry
+    def _layer_outs(x, p, w):
         x, kv, ssm_state, xkv = _layer_fwd(
             cfg, p, x, pos, w, collect_cache=True, cross_fn=cross
         )
@@ -399,7 +458,50 @@ def prefill(
             outs["xk"], outs["xv"] = xkv
         return x, outs
 
-    x, collected = jax.lax.scan(step, x, (params["layers"], windows))
+    # same static-window scan as forward(); see the comment there
+    period = window_period(windows)
+    if period is None:
+
+        def step(carry, inp):
+            p, w = inp
+            return _layer_outs(carry, p, w)
+
+        xs = (params["layers"], windows)
+    else:
+        win_static = [int(windows[j]) or None for j in range(period)]
+
+        def step(carry, lp):
+            x = carry
+            outs_list = []
+            for j in range(period):
+                pj = (
+                    jax.tree_util.tree_map(lambda a, j=j: a[j], lp)
+                    if period > 1
+                    else lp
+                )
+                x, outs = _layer_outs(x, pj, win_static[j])
+                outs_list.append(outs)
+            if period == 1:
+                return x, outs_list[0]
+            stacked = {
+                key: jnp.stack([o[key] for o in outs_list])
+                for key in outs_list[0]
+            }
+            return x, stacked
+
+        xs = (
+            params["layers"]
+            if period == 1
+            else _stack_period(params["layers"], period)
+        )
+
+    x, collected = jax.lax.scan(step, x, xs)
+    if period is not None and period > 1:
+        # (L/p, p, ...) -> (L, ...): scan step t carried layers t*p..t*p+p-1
+        collected = {
+            key: v.reshape((v.shape[0] * period,) + v.shape[2:])
+            for key, v in collected.items()
+        }
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = L.unembed(x[:, -1:], params["embed"])
     if cfg.logit_softcap:

@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.modules import Module, SpaceGenerator
-from ..core.mutators import DEFAULT_MUTATORS, mutate
+from ..core.modules import SpaceGenerator
+from ..core.mutators import mutate
 from ..core.schedule import Schedule
 from ..core.tir import PrimFunc
 from ..core.trace import Trace

@@ -10,12 +10,12 @@ fixed-size program vector.
 from __future__ import annotations
 
 import math
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 from ..core.schedule import BlockNode, LoopNode, Schedule
-from ..core.tir import BinOp, Expr, Load, REDUCE, Select, UnOp
+from ..core.tir import Expr, Load, REDUCE, Select
 
 N_BLOCK_FEATURES = 18
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import hashlib
 import json
 import weakref
-from typing import Any, Dict
+from typing import Any
 
 import numpy as np
 

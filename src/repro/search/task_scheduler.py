@@ -10,15 +10,14 @@ search round for it.
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.modules import Module, SpaceGenerator, default_modules
+from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
-from .database import Database, workload_key
+from .database import Database
 from .evolutionary import EvolutionarySearch, SearchConfig
 from .measure import as_runner
 

@@ -8,21 +8,18 @@ executable — the integration point used by models and benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-import numpy as np
 
-from ..backends import jnp_backend
 from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import Module, SpaceGenerator, default_modules
-from ..core.schedule import Schedule
 from ..core.tir import PrimFunc
 from ..core.trace import Trace
 from ..core.validator import validate_trace
-from ..core.workloads import WORKLOADS, get_workload
-from .database import Database, TuningRecord, workload_key
+from ..core.workloads import get_workload
+from .database import Database, workload_key
 from .evolutionary import EvolutionarySearch, SearchConfig
-from .measure import MeasureInput, Runner, as_runner
+from .measure import MeasureInput, as_runner
 from .runner import LocalRunner
 
 

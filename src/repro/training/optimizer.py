@@ -7,7 +7,6 @@ parameter sharding tree applies verbatim — ZeRO-style sharded optimizer.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 

@@ -8,13 +8,11 @@ applied inside the model's layer scan (transformer.loss_fn(remat=True)).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 from ..models.registry import Model
 from .optimizer import OptConfig, adamw_update
 

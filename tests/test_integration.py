@@ -2,8 +2,6 @@
 scheduler cold-start/plateau fixes, database robustness."""
 
 import glob
-import json
-import os
 import time
 
 import jax
@@ -80,11 +78,19 @@ class TestExtraction:
             jax.make_jaxpr(lambda x, w: jnp.einsum("mk,kn->mn", x, w))(spec, wkn)
         )
         assert ok[0].dispatchable
-        # transposed weight (unembed layout): tunable but not dispatchable
+        # transposed weight (unembed layout): served via transpose-at-load
+        # in DispatchContext.dense, same (m, n, k) workload key
         t = sites_from_jaxpr(
             jax.make_jaxpr(lambda x, w: jnp.einsum("mk,nk->mn", x, w))(spec, wnk)
         )
-        assert not t[0].dispatchable
+        assert t[0].dispatchable
+        assert t[0].kwargs == ok[0].kwargs
+        # a contraction the hook cannot serve (3-D rhs) stays non-dispatchable
+        w3 = jax.ShapeDtypeStruct((2, 8, 6), jnp.float32)
+        nd = sites_from_jaxpr(
+            jax.make_jaxpr(lambda x, w: jnp.einsum("mk,bkn->bmn", x, w))(spec, w3)
+        )
+        assert not any(s.dispatchable for s in nd if s.op == "dense")
 
     def test_min_elems_filter_and_cap(self):
         cfg = get_config("smollm-135m", smoke=True)

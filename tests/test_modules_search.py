@@ -17,10 +17,9 @@ from repro.core.mutators import mutate
 from repro.core.tir import evaluate_primfunc, random_inputs
 from repro.core.validator import validate_trace
 from repro.search.cost_model import GBDTCostModel
-from repro.search.database import Database, TuningRecord, workload_key
-from repro.search.evolutionary import EvolutionarySearch, SearchConfig
+from repro.search.database import Database, TuningRecord
+from repro.search.evolutionary import SearchConfig
 from repro.search.features import extract_features
-from repro.search.runner import LocalRunner
 from repro.search.tune import apply_best, tune_workload
 
 SPACE_WORKLOADS = ["gmm", "sfm", "c2d", "dense", "dep", "relu"]
