@@ -16,12 +16,19 @@ fixed-block default.  (It deliberately does *not* also require
 bypasses the chunked score/value contractions — see the comment in
 ci.yml.)  The flag repeats for jobs that do need several ops.
 
+With ``--report BENCH_tuning_report.json`` (the output of
+``benchmarks/report.py``) it can additionally gate on observed dispatch
+coverage: ``--min-dispatch-hit-rate 0.05`` fails when the trace-derived
+``mode="best"`` hit rate drops below the floor — a broken dispatch path
+shows up here even when forward timings stay plausible.
+
 Usage::
 
     python benchmarks/check_regression.py [BENCH_end_to_end.json]
         [--min-speedup 1.0] [--tolerance 0.05]
         [--require-dispatched-op attention]
         [--require-dispatched-op batch_matmul]
+        [--report BENCH_tuning_report.json --min-dispatch-hit-rate 0.05]
 """
 
 from __future__ import annotations
@@ -34,11 +41,36 @@ from pathlib import Path
 DEFAULT_JSON = Path(__file__).resolve().parents[1] / "BENCH_end_to_end.json"
 
 
+def check_report(path: Path, min_dispatch_hit_rate: float) -> "list[str]":
+    """Gate on a folded tuning report; returns failure messages."""
+    report = json.loads(Path(path).read_text())
+    dispatch = report.get("dispatch", {})
+    rate = dispatch.get("hit_rate")
+    if rate is None:
+        return [
+            f"{path}: no mode='best' dispatch events in the report — "
+            "cannot assert the hit-rate floor"
+        ]
+    status = "ok" if rate >= min_dispatch_hit_rate else "REGRESSION"
+    print(
+        f"dispatch hit_rate(best)={rate:.3f} "
+        f"(floor {min_dispatch_hit_rate:.3f}, hits={dispatch.get('hits')}, "
+        f"misses={dispatch.get('misses')}) [{status}]"
+    )
+    if rate < min_dispatch_hit_rate:
+        return [
+            f"dispatch hit rate {rate:.3f} < floor {min_dispatch_hit_rate:.3f}"
+        ]
+    return []
+
+
 def check(
     path: Path,
     min_speedup: float = 1.0,
     tolerance: float = 0.05,
     require_dispatched_op: "str | list" = "",
+    report: str = "",
+    min_dispatch_hit_rate: float = 0.0,
 ) -> int:
     required_ops = (
         [require_dispatched_op]
@@ -79,6 +111,8 @@ def check(
                     f"{name}: no {op!r} task was dispatched "
                     f"(extracted: {len(present)})"
                 )
+    if report:
+        failures.extend(check_report(Path(report), min_dispatch_hit_rate))
     if failures:
         print("FAIL:\n  " + "\n  ".join(failures))
         return 1
@@ -99,12 +133,24 @@ def main(argv=None) -> int:
         help="fail unless >=1 task of this op was dispatched (e.g. "
              "batch_matmul); repeat the flag for several ops",
     )
+    ap.add_argument(
+        "--report", default="",
+        help="folded tuning report (benchmarks/report.py output) to gate "
+             "dispatch coverage against",
+    )
+    ap.add_argument(
+        "--min-dispatch-hit-rate", type=float, default=0.0,
+        help="floor on the report's mode='best' dispatch hit rate "
+             "(requires --report)",
+    )
     args = ap.parse_args(argv)
     return check(
         Path(args.json_path),
         min_speedup=args.min_speedup,
         tolerance=args.tolerance,
         require_dispatched_op=args.require_dispatched_op,
+        report=args.report,
+        min_dispatch_hit_rate=args.min_dispatch_hit_rate,
     )
 
 

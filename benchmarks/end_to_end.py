@@ -40,7 +40,10 @@ default 128), ``REPRO_TIMEOUT_S`` (per-candidate measurement timeout;
 CI smoke lowers it so pathological interpret-mode candidates get cut
 off early), ``REPRO_E2E_SKIP_TUNED=1`` (skip tuning for tasks that
 already hold a database record — the CI database cache relies on this
-to avoid re-tuning identical tasks on every push).
+to avoid re-tuning identical tasks on every push),
+``REPRO_E2E_SERVE=0`` (skip the short serving leg that reports
+prefill/decode tok/s), ``REPRO_TRACE=<path>`` (structured trace JSONL
+of the whole run — fold it with ``benchmarks/report.py``).
 """
 
 from __future__ import annotations
@@ -216,6 +219,26 @@ def run(
         untuned_ms, _ = _timed_forward(model, params, toks, untuned_ctx, repeats)
         tuned_ms, got = _timed_forward(model, params, toks, tuned_ctx, repeats)
         hits, misses = tuned_ctx.stats["hits"], tuned_ctx.stats["misses"]
+        # 4. serve: a short batched prefill+decode leg through the tuned
+        # context — emits serve.prefill / serve.decode trace events and
+        # the tok/s the report's serving section summarizes.  Off with
+        # REPRO_E2E_SERVE=0 (forward-only timing runs).
+        prefill_tok_s = decode_tok_s = None
+        if os.environ.get("REPRO_E2E_SERVE", "1") == "1":
+            from repro.serving.engine import ServingEngine
+
+            eng = ServingEngine(
+                cfg, params, max_batch=2, max_seq=min(seq, 64),
+                dispatch=tuned_ctx,
+            )
+            rng = np.random.default_rng(0)
+            for _ in range(2):
+                eng.submit(
+                    rng.integers(0, cfg.vocab, 8), max_new_tokens=4
+                )
+            eng.run()
+            prefill_tok_s = round(eng.prefill_tok_s, 2)
+            decode_tok_s = round(eng.decode_tok_s, 2)
         # numeric check: tuned forward vs the pure-XLA reference, reusing
         # the logits the timed runs already produced
         max_err = float(
@@ -282,6 +305,8 @@ def run(
             "attention_tuned_hits": tuned_ctx.stats.get("attention_tuned", 0),
             "numerics_max_abs_err": round(max_err, 6),
             "numerics_rel_err": round(max_err / ref_scale, 6),
+            "serving_prefill_tok_s": prefill_tok_s,
+            "serving_decode_tok_s": decode_tok_s,
             "tasks": task_rows,
         }
         out.append(row)
@@ -295,6 +320,10 @@ def run(
                 f"attn_bmm_dispatched={attn_disp}/{attn_total},"
                 f"attn_fused_dispatched={fused_disp}/{fused_total},"
                 f"rel_err={row['numerics_rel_err']:.2e}"
+                + (
+                    f",prefill={prefill_tok_s}tok/s,decode={decode_tok_s}tok/s"
+                    if prefill_tok_s is not None else ""
+                )
             )
     payload = {
         "benchmark": "end_to_end",

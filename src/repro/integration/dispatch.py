@@ -42,6 +42,7 @@ from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
 from ..core.validator import first_valid_schedule, validate_trace
+from ..obs import emit, metrics, trace_enabled
 from ..search.database import Database, parse_workload_key, workload_key
 
 # active-context stack; layers read the top via current().  Thread-local so
@@ -120,6 +121,11 @@ class DispatchContext:
             "attention_tuned": 0,
         }
         self.hits_by_key: Dict[str, int] = {}
+        # per-key outcome table with labeled reasons — the two bare
+        # counters above stay for backward compat; stats_by_key() exposes
+        # the granular view and dispatch.* trace events mirror it
+        self._by_key: Dict[str, Dict[str, Any]] = {}
+        self.miss_reasons: Dict[str, str] = {}  # key -> why kernel() is None
         self._funcs: Dict[str, PrimFunc] = {}
         self._task_mxu: Dict[str, bool] = {}
         self._compiled: Dict[str, Optional[CompiledKernel]] = {}
@@ -162,16 +168,18 @@ class DispatchContext:
         return [k for k in self._funcs if self.db.best(k) is not None]
 
     def _schedule_for(self, key: str, func: PrimFunc):
-        """(schedule, source, latency) for a key, or None."""
+        """(schedule, source, latency); schedule None -> source is the
+        miss reason ("no_database" | "no_record" | "invalid_trace" |
+        "no_valid_schedule")."""
         if self.mode == "best":
             if self.db is None:
-                return None
+                return None, "no_database", float("inf")
             rec = self.db.best(key)
             if rec is None:
-                return None
+                return None, "no_record", float("inf")
             v = validate_trace(func, rec.trace())
             if not v.ok:
-                return None
+                return None, "invalid_trace", float("inf")
             return v.schedule, "database", rec.latency_s
         # mode == "default": the canonical untuned schedule.  Use the
         # task's own space configuration when known so this is the exact
@@ -186,19 +194,23 @@ class DispatchContext:
         space = SpaceGenerator(default_modules(use_mxu=mxu))
         sch = first_valid_schedule(func, space, self.default_seed_scan)
         if sch is None:
-            return None
+            return None, "no_valid_schedule", float("inf")
         return sch, "default", float("inf")
 
     def kernel(self, key: str) -> Optional[CompiledKernel]:
-        """Compiled kernel for ``key`` (lazy; None caches the miss)."""
+        """Compiled kernel for ``key`` (lazy; None caches the miss, and
+        ``miss_reasons[key]`` records why)."""
         if key in self._compiled:
             return self._compiled[key]
         func = self._funcs.get(key)
         kern: Optional[CompiledKernel] = None
-        if func is not None:
-            got = self._schedule_for(key, func)
-            if got is not None:
-                sch, source, lat = got
+        if func is None:
+            self.miss_reasons[key] = "unknown_key"
+        else:
+            sch, source, lat = self._schedule_for(key, func)
+            if sch is None:
+                self.miss_reasons[key] = source
+            else:
                 try:
                     lowered = get_backend(self.backend).lower(
                         sch, workload_key=key
@@ -208,6 +220,7 @@ class DispatchContext:
                     # grid cap) is a miss, not a crash: the layer falls
                     # back to its jnp reference path
                     lowered = None
+                    self.miss_reasons[key] = "lowering_failed"
                 if lowered is not None:
                     kern = CompiledKernel(
                         key=key,
@@ -230,13 +243,64 @@ class DispatchContext:
 
     # -- op-level lookups (called from model layers at trace time) ---------
 
-    def _lookup(self, key: str) -> Optional[CompiledKernel]:
+    def _note(
+        self,
+        outcome: str,
+        key: Optional[str],
+        site: str,
+        reason: Optional[str] = None,
+    ) -> None:
+        """Record a dispatch outcome ("hit" | "miss" | "fallback") in the
+        per-key table, the metrics registry, and the trace stream.  The
+        legacy ``stats``/``hits_by_key`` counters are NOT touched here —
+        callers keep incrementing those at the historical points."""
+        row_key = key if key else f"site:{site}"
+        row = self._by_key.get(row_key)
+        if row is None:
+            row = self._by_key[row_key] = {
+                "site": site,
+                "hits": 0,
+                "misses": 0,
+                "fallbacks": 0,
+                "reasons": {},
+            }
+        row["hits" if outcome == "hit" else
+            "misses" if outcome == "miss" else "fallbacks"] += 1
+        if reason:
+            row["reasons"][reason] = row["reasons"].get(reason, 0) + 1
+        metrics().inc(
+            f"dispatch.{outcome}",
+            site=site,
+            mode=self.mode,
+            backend=self.backend,
+        )
+        if trace_enabled():
+            emit(
+                f"dispatch.{outcome}",
+                key=key,
+                site=site,
+                reason=reason,
+                mode=self.mode,
+                backend=self.backend,
+            )
+
+    def stats_by_key(self) -> Dict[str, Dict[str, Any]]:
+        """Per-key (or per-site for keyless fallbacks) outcome table:
+        ``{key: {site, hits, misses, fallbacks, reasons: {reason: n}}}``."""
+        return {
+            k: {**row, "reasons": dict(row["reasons"])}
+            for k, row in self._by_key.items()
+        }
+
+    def _lookup(self, key: str, site: str = "") -> Optional[CompiledKernel]:
         kern = self.kernel(key)
         if kern is None:
             self.stats["misses"] += 1
+            self._note("miss", key, site, self.miss_reasons.get(key))
             return None
         self.stats["hits"] += 1
         self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
+        self._note("hit", key, site)
         return kern
 
     def dense(
@@ -250,19 +314,22 @@ class DispatchContext:
         folds into the jitted graph (XLA fuses it into the operand read).
         """
         if x.ndim < 1 or w.ndim != 2:
+            self._note("fallback", None, "dense", "shape_mismatch")
             return None
         if transpose_w:
             if x.shape[-1] != w.shape[1]:
+                self._note("fallback", None, "dense", "shape_mismatch")
                 return None
             n, k = int(w.shape[0]), int(w.shape[1])
         else:
             if x.shape[-1] != w.shape[0]:
+                self._note("fallback", None, "dense", "shape_mismatch")
                 return None
             k, n = int(w.shape[0]), int(w.shape[1])
         m = 1
         for s in x.shape[:-1]:
             m *= int(s)
-        kern = self._lookup(workload_key("dense", m=m, n=n, k=k))
+        kern = self._lookup(workload_key("dense", m=m, n=n, k=k), "dense")
         if kern is None:
             return None
         if kern.grad_fn is None:
@@ -291,8 +358,10 @@ class DispatchContext:
         f32 scores); None -> caller falls back to its jnp einsum.
         """
         if a.ndim < 3 or b.ndim != a.ndim or a.shape[-1] != b.shape[-2]:
+            self._note("fallback", None, "batch_matmul", "shape_mismatch")
             return None
         if a.shape[:-2] != b.shape[:-2]:
+            self._note("fallback", None, "batch_matmul", "shape_mismatch")
             return None
         bdims = a.shape[:-2]
         B = 1
@@ -300,7 +369,9 @@ class DispatchContext:
             B *= int(s)
         M, K = int(a.shape[-2]), int(a.shape[-1])
         N = int(b.shape[-1])
-        kern = self._lookup(workload_key("batch_matmul", b=B, m=M, n=N, k=K))
+        kern = self._lookup(
+            workload_key("batch_matmul", b=B, m=M, n=N, k=K), "batch_matmul"
+        )
         if kern is None:
             return None
         if kern.grad_fn is None:
@@ -344,19 +415,23 @@ class DispatchContext:
         the reference-attention VJP, like every other dispatched kernel.
         """
         if isinstance(q_offset, jax.core.Tracer) or q_offset != 0:
+            self._note("fallback", None, "attention", "decode_offset")
             return None
         B, H, S, D = (int(s) for s in q.shape)
         KVH, T = int(k.shape[1]), int(k.shape[2])
         if v.shape != k.shape or T != S or H % KVH != 0:
+            self._note("fallback", None, "attention", "shape_mismatch")
             return None
         if window is not None:
             if isinstance(window, jax.core.Tracer):
+                self._note("fallback", None, "attention", "traced_window")
                 return None
             w = int(window)
             # 0 = global; a window covering the whole sequence is global
             # too — the canonical form the extracted task keys use
             window = None if (w <= 0 or w >= S) else w
         if softcap is not None and isinstance(softcap, jax.core.Tracer):
+            self._note("fallback", None, "attention", "traced_softcap")
             return None
 
         def ref(q2, k2, v2):
@@ -377,15 +452,24 @@ class DispatchContext:
                 softcap=float(softcap or 0.0),
             )
             kern = self.kernel(key)
-            if kern is not None and not _attention_kern_servable(
+            unservable = kern is not None and not _attention_kern_servable(
                 kern, B, H, S
-            ):
+            )
+            if unservable:
                 kern = None  # structural lowering too large to serve
             if kern is None:
                 self.stats["misses"] += 1
+                self._note(
+                    "miss",
+                    key,
+                    "attention",
+                    "unservable" if unservable
+                    else self.miss_reasons.get(key),
+                )
             else:
                 self.stats["hits"] += 1
                 self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
+                self._note("hit", key, "attention")
                 G = H // KVH
                 if kern.grad_fn is None:
                     def fwd_kernel(q5, k2, v2):
@@ -409,6 +493,7 @@ class DispatchContext:
         be = get_backend(self.backend)
         fused = getattr(be, "fused_attention", None)
         if fused is None:
+            self._note("fallback", None, "attention", "no_fused_backend")
             return None
 
         def kernel_fn(q2, k2, v2):
@@ -420,6 +505,7 @@ class DispatchContext:
             )
 
         self.stats["attention_fused"] += 1
+        self._note("fallback", None, "attention", "backend_fused")
         return _with_reference_grad(kernel_fn, ref)(q, k, v)
 
     def rmsnorm(
@@ -427,12 +513,15 @@ class DispatchContext:
     ) -> Optional[jnp.ndarray]:
         """Tuned RMS norm over the last axis; None -> caller falls back."""
         if x.ndim < 1 or w.ndim != 1 or x.shape[-1] != w.shape[0]:
+            self._note("fallback", None, "rmsnorm", "shape_mismatch")
             return None
         tokens = 1
         for s in x.shape[:-1]:
             tokens *= int(s)
         d = int(x.shape[-1])
-        kern = self._lookup(workload_key("rmsnorm", d=d, eps=eps, tokens=tokens))
+        kern = self._lookup(
+            workload_key("rmsnorm", d=d, eps=eps, tokens=tokens), "rmsnorm"
+        )
         if kern is None:
             return None
         if kern.grad_fn is None:

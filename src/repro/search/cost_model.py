@@ -10,10 +10,13 @@ consumes.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np
+
+from ..obs import emit, metrics, trace_enabled
 
 
 @dataclass
@@ -123,7 +126,17 @@ class GBDTCostModel:
         else:
             self._X = np.concatenate([self._X, X])
             self._y = np.concatenate([self._y, y])
+        t0 = time.perf_counter()
         self._fit(self._X, self._y)
+        dt = time.perf_counter() - t0
+        metrics().observe("costmodel.fit_s", dt)
+        if trace_enabled():
+            emit(
+                "costmodel.update",
+                n_samples=len(self._y),
+                n_trees=len(self.trees),
+                dur_s=dt,
+            )
 
     def _fit(self, X, y):
         self.trees = []

@@ -27,6 +27,7 @@ from ..core.schedule import Schedule
 from ..core.tir import PrimFunc
 from ..core.trace import Trace
 from ..core.validator import validate_trace
+from ..obs import ConsoleSink, emit, metrics, span, spearman, trace_enabled
 from .cost_model import GBDTCostModel
 from .database import Database, TuningRecord
 from .features import extract_features
@@ -75,6 +76,9 @@ class EvolutionarySearch:
         self.model = cost_model or GBDTCostModel(seed=self.cfg.seed)
         self.rng = np.random.default_rng(self.cfg.seed)
         self.verbose = verbose
+        # verbose=True is a console-sink alias: the same events the tracer
+        # records go to stdout as compact lines (the old print() paths)
+        self._console = ConsoleSink() if verbose else None
         # measured state
         self.measured: Dict[str, float] = {}  # structural hash -> latency
         self.best_latency = float("inf")
@@ -82,6 +86,9 @@ class EvolutionarySearch:
         self.history: List[Tuple[int, float]] = []  # (trial, best so far)
         self.failure_counts: List[int] = []  # failed measurements per round
         self.errors: List[Tuple[str, str]] = []  # (structural hash, error)
+        # per-round predicted-vs-measured record: the cost model's rank
+        # correlation is a first-class recorded metric, not a debug print
+        self.round_correlations: List[Dict] = []
         self._X: List[np.ndarray] = []
         self._lat: List[float] = []
 
@@ -89,6 +96,12 @@ class EvolutionarySearch:
 
     def _dkey(self, trace: Trace) -> str:
         return structural_hash(self.key, trace)
+
+    def _event(self, ev: str, **fields) -> None:
+        """Emit to the tracer and, when ``verbose``, to the console."""
+        emit(ev, **fields)
+        if self._console is not None:
+            self._console.write({"ev": ev, **fields})
 
     @property
     def total_failures(self) -> int:
@@ -122,6 +135,7 @@ class EvolutionarySearch:
         return Candidate(res.schedule.trace, res.schedule, feats)
 
     def _sample_initial(self, n: int) -> List[Candidate]:
+        t0 = time.perf_counter()
         out: List[Candidate] = []
         tries = 0
         while len(out) < n and tries < n * 10:
@@ -131,6 +145,15 @@ class EvolutionarySearch:
             cand = self._validated(sch.trace)
             if cand is not None:
                 out.append(cand)
+        if trace_enabled():
+            emit(
+                "search.sample",
+                task=self.key,
+                requested=n,
+                valid=len(out),
+                tries=tries,
+                dur_s=time.perf_counter() - t0,
+            )
         return out
 
     def _score(self, cands: List[Candidate]) -> None:
@@ -148,6 +171,15 @@ class EvolutionarySearch:
 
     def _evolve(self, population: List[Candidate]) -> List[Candidate]:
         """Annealed-MH evolution of the candidate pool via trace mutation."""
+        with span(
+            "search.evolve",
+            task=self.key,
+            population=len(population),
+            generations=self.cfg.generations,
+        ):
+            return self._evolve_inner(population)
+
+    def _evolve_inner(self, population: List[Candidate]) -> List[Candidate]:
         temp = self.cfg.temp_init
         pool = list(population)
         self._score(pool)
@@ -206,7 +238,11 @@ class EvolutionarySearch:
             MeasureInput(self.key, self.func, c.trace, schedule=c.schedule)
             for c in cands
         ]
-        results = self.runner.run(batch)
+        # predictions were made against the model state *before* this
+        # round's retrain — capture it for the correlation record
+        model_trained = self.model.trained
+        with span("measure.batch", task=self.key, n=len(cands)):
+            results = self.runner.run(batch)
         round_failures = 0
         for c, res in zip(cands, results):
             lat = res.latency_s
@@ -233,11 +269,47 @@ class EvolutionarySearch:
                 self.errors.append((h, res.error))
             self.history.append((len(self.measured), self.best_latency))
         self.failure_counts.append(round_failures)
-        if round_failures and self.verbose:
-            print(
-                f"[{self.key}] round {len(self.failure_counts)}: "
-                f"{round_failures}/{len(cands)} measurements failed "
-                f"(last: {self.errors[-1][1]})"
+        round_idx = len(self.failure_counts)
+        if round_failures:
+            self._event(
+                "measure.round_failures",
+                task=self.key,
+                round=round_idx,
+                failed=round_failures,
+                of=len(cands),
+                last_error=self.errors[-1][1],
+            )
+        # cost-model accuracy: rank correlation of predicted score vs
+        # measured latency for this round's candidates.  Scores rank
+        # *throughput*, so correlate against negated latency — a healthy
+        # model trends toward +1.
+        pairs = [
+            (float(c.score), float(res.latency_s))
+            for c, res in zip(cands, results)
+            if res.ok
+        ]
+        rho = spearman([p for p, _ in pairs], [-l for _, l in pairs])
+        rec = {
+            "round": round_idx,
+            "n": len(pairs),
+            "spearman": rho,
+            "trained": model_trained,
+        }
+        self.round_correlations.append(rec)
+        if rho is not None and model_trained:
+            metrics().observe("costmodel.rank_corr", rho, task=self.key)
+        if trace_enabled():
+            emit(
+                "costmodel.round",
+                task=self.key,
+                pairs=[[round(p, 6), l] for p, l in pairs],
+                **rec,
+            )
+        metrics().inc("search.measured", len(cands), task=self.key)
+        metrics().inc("search.failures", round_failures, task=self.key)
+        if np.isfinite(self.best_latency):
+            metrics().gauge(
+                "search.best_latency_s", self.best_latency, task=self.key
             )
         # retrain the model on normalized throughput scores
         if self._lat:
@@ -250,26 +322,55 @@ class EvolutionarySearch:
     # -- main loop -------------------------------------------------------------
 
     def tune(self) -> "EvolutionarySearch":
-        init = self._sample_initial(self.cfg.init_random)
-        if not init:
-            raise RuntimeError(f"{self.key}: space generated no valid samples")
-        self._measure(init[: self.cfg.measure_per_round])
-        pool = init
-        while len(self.measured) < self.cfg.max_trials:
-            # refill population with fresh randoms + survivors
-            survivors = sorted(pool, key=lambda c: -c.score)[: self.cfg.population // 2]
-            fresh = self._sample_initial(self.cfg.population - len(survivors))
-            pool = survivors + fresh
-            pool = self._evolve(pool)
-            to_measure = self._select_to_measure(
-                pool, min(self.cfg.measure_per_round, self.cfg.max_trials - len(self.measured))
+        with span("tune.round", task=self.key, round=0) as sp:
+            init = self._sample_initial(self.cfg.init_random)
+            if not init:
+                raise RuntimeError(
+                    f"{self.key}: space generated no valid samples"
+                )
+            self._measure(init[: self.cfg.measure_per_round])
+            sp.note(trials=len(self.measured), best_latency_s=self.best_latency)
+        if self._console is not None:
+            self._console.write(
+                {
+                    "ev": "tune.round",
+                    "task": self.key,
+                    "trials": len(self.measured),
+                    "best_us": self.best_latency * 1e6,
+                }
             )
-            if not to_measure:
-                break
-            self._measure(to_measure)
-            if self.verbose:
-                print(
-                    f"[{self.key}] trials={len(self.measured)} "
-                    f"best={self.best_latency*1e6:.1f}us"
+        pool = init
+        r = 0
+        while len(self.measured) < self.cfg.max_trials:
+            r += 1
+            with span("tune.round", task=self.key, round=r) as sp:
+                # refill population with fresh randoms + survivors
+                survivors = sorted(pool, key=lambda c: -c.score)[
+                    : self.cfg.population // 2
+                ]
+                fresh = self._sample_initial(self.cfg.population - len(survivors))
+                pool = survivors + fresh
+                pool = self._evolve(pool)
+                to_measure = self._select_to_measure(
+                    pool,
+                    min(
+                        self.cfg.measure_per_round,
+                        self.cfg.max_trials - len(self.measured),
+                    ),
+                )
+                if not to_measure:
+                    break
+                self._measure(to_measure)
+                sp.note(
+                    trials=len(self.measured), best_latency_s=self.best_latency
+                )
+            if self._console is not None:
+                self._console.write(
+                    {
+                        "ev": "tune.round",
+                        "task": self.key,
+                        "trials": len(self.measured),
+                        "best_us": self.best_latency * 1e6,
+                    }
                 )
         return self

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List
 
+from ...obs import emit, metrics, trace_enabled
 from .hashing import structural_hash
 from .protocol import MeasureInput, MeasureResult, Runner
 
@@ -38,6 +39,18 @@ class CachedRunner(Runner):
         # differently through different lowerings
         return structural_hash(f"{self.backend}::{mi.workload_key}", mi.trace)
 
+    def _note(self, hit: bool, key: str, h: str) -> None:
+        metrics().inc(
+            "cache.hits" if hit else "cache.misses", backend=self.backend
+        )
+        if trace_enabled():
+            emit(
+                "cache.hit" if hit else "cache.miss",
+                key=key,
+                hash=h,
+                backend=self.backend,
+            )
+
     def run(self, inputs: List[MeasureInput]) -> List[MeasureResult]:
         results: List[MeasureResult] = [None] * len(inputs)  # type: ignore[list-item]
         primary: List[int] = []          # first occurrence of each missing hash
@@ -47,12 +60,15 @@ class CachedRunner(Runner):
             h = self._hash(mi)
             if h in self.cache:
                 self.hits += 1
+                self._note(True, mi.workload_key, h)
                 results[i] = self.cache[h].as_cache_hit()
             elif h in followers:
                 self.hits += 1
+                self._note(True, mi.workload_key, h)
                 followers[h].append(i)
             else:
                 self.misses += 1
+                self._note(False, mi.workload_key, h)
                 primary.append(i)
                 primary_hash.append(h)
                 followers[h] = []

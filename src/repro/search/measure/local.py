@@ -19,6 +19,8 @@ import numpy as np
 from ...backends.registry import get_backend, resolve_backend_spec
 from ...core.tir import PrimFunc, random_inputs
 from ...core.validator import validate_trace
+from ...obs import emit, metrics, trace_enabled
+from .hashing import structural_hash
 from .protocol import Builder, BuildResult, MeasureInput, MeasureResult, Runner
 
 
@@ -42,23 +44,39 @@ class LocalBuilder(Builder):
                     v = validate_trace(mi.func, mi.trace)
                     if not v.ok:
                         out.append(BuildResult(error=f"invalid trace: {v.reason}"))
-                        continue
-                    sch = v.schedule
-                lowered = be.lower(sch, workload_key=mi.workload_key)
-                fn = jax.jit(lowered.fn)
-                out.append(
-                    BuildResult(
-                        artifact=fn,
-                        build_time_s=time.perf_counter() - t0,
-                        meta=lowered.meta,
+                        sch = None
+                    else:
+                        sch = v.schedule
+                if sch is not None:
+                    lowered = be.lower(sch, workload_key=mi.workload_key)
+                    fn = jax.jit(lowered.fn)
+                    out.append(
+                        BuildResult(
+                            artifact=fn,
+                            build_time_s=time.perf_counter() - t0,
+                            meta=lowered.meta,
+                        )
                     )
-                )
             except Exception as e:  # lowering failure -> rejection, not crash
                 out.append(
                     BuildResult(
                         error=f"{type(e).__name__}: {e}",
                         build_time_s=time.perf_counter() - t0,
                     )
+                )
+            br = out[-1]
+            metrics().observe(
+                "measure.build_s", br.build_time_s, backend=self.backend
+            )
+            if trace_enabled():
+                emit(
+                    "measure.build",
+                    key=mi.workload_key,
+                    hash=structural_hash(mi.workload_key, mi.trace),
+                    ok=br.ok,
+                    dur_s=br.build_time_s,
+                    backend=self.backend,
+                    **({"error": br.error} if br.error else {}),
                 )
         return out
 
@@ -131,10 +149,12 @@ class LocalRunner(Runner):
         for mi, br in zip(inputs, built):
             if not br.ok:
                 self.n_failed += 1
+                metrics().inc("measure.failed", backend=self.backend)
                 out.append(
                     MeasureResult(float("inf"), br.error, build_time_s=br.build_time_s)
                 )
                 continue
+            t0 = time.perf_counter()
             res = time_artifact(
                 br.artifact,
                 self._inputs(mi.func),
@@ -142,11 +162,28 @@ class LocalRunner(Runner):
                 self.warmup,
                 self.timeout_s,
             )
+            # full run-stage wall (first call + warmup + timed repeats) —
+            # what the report's build/run/overhead breakdown consumes
+            run_wall = time.perf_counter() - t0
             res.build_time_s = br.build_time_s
             res.meta = br.meta
             self.n_measured += 1
+            metrics().inc("measure.measured", backend=self.backend)
+            metrics().observe("measure.run_s", run_wall, backend=self.backend)
             if not res.ok:
                 self.n_failed += 1
+                metrics().inc("measure.failed", backend=self.backend)
+            if trace_enabled():
+                emit(
+                    "measure.run",
+                    key=mi.workload_key,
+                    hash=structural_hash(mi.workload_key, mi.trace),
+                    ok=res.ok,
+                    latency_s=res.latency_s if res.ok else None,
+                    dur_s=run_wall,
+                    backend=self.backend,
+                    **({"error": res.error} if res.error else {}),
+                )
             out.append(res)
         return out
 

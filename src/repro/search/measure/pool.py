@@ -36,6 +36,7 @@ import sys
 import time
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from ...obs import emit, metrics, trace_enabled
 from .hashing import structural_hash
 from .protocol import MeasureInput, MeasureResult, Runner
 
@@ -85,15 +86,20 @@ def _measure_worker(payload: dict) -> dict:
             _WORKER_INPUT_CACHE[ins_key] = ins
         build_s = time.perf_counter() - t_start
         # the one shared timing loop (first-call timeout, warmup, median)
+        t_run = time.perf_counter()
         res = time_artifact(
             fn, ins, payload["repeats"], payload["warmup"], payload["timeout_s"]
         )
+        # full run-stage wall (incl. first call + warmup): the parent's
+        # measure.run events and the report's time breakdown consume it
+        meta = dict(lowered.meta)
+        meta["run_wall_s"] = round(time.perf_counter() - t_run, 6)
         return {
             "latency_s": res.latency_s,
             "error": res.error,
             "build_time_s": build_s,
             "run_time_s": res.run_time_s,
-            "meta": lowered.meta,
+            "meta": meta,
         }
     except Exception as e:
         return {
@@ -239,6 +245,14 @@ class ProcessPoolRunner(Runner):
             h = structural_hash(mi.workload_key, mi.trace)
             if h in self.quarantined:
                 self.n_quarantine_rejects += 1
+                metrics().inc("measure.quarantine_rejects", backend=self.backend)
+                if trace_enabled():
+                    emit(
+                        "measure.quarantine_reject",
+                        key=mi.workload_key,
+                        hash=h,
+                        backend=self.backend,
+                    )
                 results[i] = MeasureResult(
                     float("inf"),
                     "quarantined after repeated worker crashes",
@@ -249,6 +263,51 @@ class ProcessPoolRunner(Runner):
         if live:
             self._run_live(live, results)
         return results  # type: ignore[return-value]
+
+    def _emit_result(self, h: str, payload: dict, out: dict) -> None:
+        """Parent-side telemetry for one completed worker measurement
+        (build and run happened fused inside the worker)."""
+        key = payload.get("workload_key", "")
+        meta = out.get("meta") or {}
+        ok = not out.get("error")
+        build_s = float(out.get("build_time_s", 0.0))
+        run_wall = float(meta.get("run_wall_s", out.get("run_time_s", 0.0)))
+        metrics().inc("measure.measured", backend=self.backend)
+        if not ok:
+            metrics().inc("measure.failed", backend=self.backend)
+        metrics().observe("measure.build_s", build_s, backend=self.backend)
+        metrics().observe("measure.run_s", run_wall, backend=self.backend)
+        if trace_enabled():
+            emit(
+                "measure.build",
+                key=key,
+                hash=h,
+                ok=ok,
+                dur_s=build_s,
+                backend=self.backend,
+            )
+            emit(
+                "measure.run",
+                key=key,
+                hash=h,
+                ok=ok,
+                latency_s=out["latency_s"] if ok else None,
+                dur_s=run_wall,
+                backend=self.backend,
+                **({"error": out["error"]} if out.get("error") else {}),
+            )
+
+    def _emit_timeout(self, h: str, key: str, note: str) -> None:
+        metrics().inc("measure.timeouts", backend=self.backend)
+        if trace_enabled():
+            emit(
+                "measure.timeout",
+                key=key,
+                hash=h,
+                timeout_s=self.timeout_s,
+                note=note,
+                backend=self.backend,
+            )
 
     def _run_live(
         self,
@@ -275,6 +334,7 @@ class ProcessPoolRunner(Runner):
                     out = fut.result()
                     results[i] = MeasureResult(**out)
                     self.n_measured += 1
+                    self._emit_result(h, payload, out)
                 except Exception:
                     # worker process died; every pending future is now dead
                     # too — retry each in isolation to attribute the crash
@@ -284,7 +344,10 @@ class ProcessPoolRunner(Runner):
         except cf.TimeoutError:
             self.n_timeouts += len(pending)
             for fut in pending:
-                i, h, _ = futs[fut]
+                i, h, payload = futs[fut]
+                self._emit_timeout(
+                    h, payload.get("workload_key", ""), "batch budget"
+                )
                 results[i] = MeasureResult(
                     float("inf"),
                     f"timeout (exceeded {self.timeout_s:.1f}s/candidate batch budget)",
@@ -311,10 +374,14 @@ class ProcessPoolRunner(Runner):
             out = fut.result(timeout=deadline)
             self.n_measured += 1
             self._cold = False
+            self._emit_result(h, payload, out)
             return MeasureResult(**out)
         except cf.TimeoutError:
             self.n_timeouts += 1
             self._kill_pool()
+            self._emit_timeout(
+                h, payload.get("workload_key", ""), "isolated retry"
+            )
             return MeasureResult(
                 float("inf"),
                 f"timeout (exceeded {self.timeout_s:.1f}s, isolated retry)",
@@ -325,9 +392,30 @@ class ProcessPoolRunner(Runner):
             self._kill_pool()
             n = self.crash_counts.get(h, 0) + 1
             self.crash_counts[h] = n
+            key = payload.get("workload_key", "")
+            metrics().inc("measure.crashes", backend=self.backend)
+            if trace_enabled():
+                emit(
+                    "measure.crash",
+                    key=key,
+                    hash=h,
+                    crash=n,
+                    threshold=self.crash_threshold,
+                    error=type(e).__name__,
+                    backend=self.backend,
+                )
             msg = f"worker crashed ({type(e).__name__}), crash {n}/{self.crash_threshold}"
             if n >= self.crash_threshold:
                 self.quarantined.add(h)
+                metrics().inc("measure.quarantined", backend=self.backend)
+                if trace_enabled():
+                    emit(
+                        "measure.crash_quarantine",
+                        key=key,
+                        hash=h,
+                        crashes=n,
+                        backend=self.backend,
+                    )
                 msg += "; trace quarantined"
             return MeasureResult(float("inf"), msg)
 

@@ -17,6 +17,7 @@ import numpy as np
 
 from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
+from ..obs import ConsoleSink, metrics, span
 from .database import Database
 from .evolutionary import EvolutionarySearch, SearchConfig
 from .measure import as_runner
@@ -66,6 +67,9 @@ class TaskScheduler:
         self.backend = getattr(self.runner, "backend", "jnp")
         cfg = config or SearchConfig()
         self.verbose = verbose
+        # verbose=True is a console-sink alias for the round events the
+        # tracer records (the old per-round print() path)
+        self._console = ConsoleSink() if verbose else None
         self.patience = patience
         self.rel_improvement = rel_improvement
         self.seed_defaults = seed_defaults
@@ -158,19 +162,45 @@ class TaskScheduler:
         self._best_seen[i] = min(prev, now)
 
     def tune(self, total_rounds: int = 16) -> Dict[str, float]:
-        for r in range(total_rounds):
-            i = self._pick_task()
-            if i is None:
-                if self.verbose:
-                    print(f"round {r}: all tasks plateaued — stopping early")
-                break
-            self._run_round(i)
-            self.rounds_run += 1
-            if self.verbose:
-                s = self.searches[i]
-                print(
-                    f"round {r}: task={self.tasks[i].key} "
-                    f"best={s.best_latency*1e6:.1f}us "
-                    f"stale={self._stale_rounds[i]}"
-                )
+        with span(
+            "tune.session",
+            tasks=[t.key for t in self.tasks],
+            backend=self.backend,
+            total_rounds=total_rounds,
+        ) as sess:
+            for r in range(total_rounds):
+                i = self._pick_task()
+                if i is None:
+                    if self._console is not None:
+                        self._console.write(
+                            {"ev": "tune.early_stop", "round": r}
+                        )
+                    sess.note(early_stop_round=r)
+                    break
+                key = self.tasks[i].key
+                with span("tune.round", task=key, round=r) as sp:
+                    self._run_round(i)
+                    s = self.searches[i]
+                    sp.note(
+                        trials=len(s.measured),
+                        best_latency_s=s.best_latency,
+                        stale=self._stale_rounds[i],
+                    )
+                self.rounds_run += 1
+                metrics().inc("tune.rounds", task=key)
+                if np.isfinite(s.best_latency):
+                    metrics().gauge(
+                        "search.best_latency_s", s.best_latency, task=key
+                    )
+                if self._console is not None:
+                    self._console.write(
+                        {
+                            "ev": "tune.round",
+                            "round": r,
+                            "task": key,
+                            "best_us": s.best_latency * 1e6,
+                            "stale": self._stale_rounds[i],
+                        }
+                    )
+            sess.note(rounds_run=self.rounds_run)
         return {t.key: s.best_latency for t, s in zip(self.tasks, self.searches)}

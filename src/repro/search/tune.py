@@ -13,6 +13,7 @@ from typing import Dict, Optional, Sequence
 
 from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import Module, SpaceGenerator, default_modules
+from ..obs import span
 from ..core.tir import PrimFunc
 from ..core.trace import Trace
 from ..core.validator import validate_trace
@@ -71,15 +72,20 @@ def tune_workload(
     space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
     runner = as_runner(runner, backend=backend)
     t0 = time.perf_counter()
-    search = EvolutionarySearch(
-        func,
-        space,
-        runner=runner,
-        database=database,
-        workload_key=key,
-        config=config,
-        verbose=verbose,
-    ).tune()
+    with span(
+        "tune.session",
+        tasks=[key],
+        backend=getattr(runner, "backend", resolve_backend_spec(backend)),
+    ):
+        search = EvolutionarySearch(
+            func,
+            space,
+            runner=runner,
+            database=database,
+            workload_key=key,
+            config=config,
+            verbose=verbose,
+        ).tune()
     dt = time.perf_counter() - t0
     if search.best_trace is not None:
         # re-verify the winner through the same runner: with a caching

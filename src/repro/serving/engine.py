@@ -19,6 +19,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models.registry import build_model
+from ..obs import emit, metrics, trace_enabled
 
 
 @dataclass
@@ -59,9 +60,21 @@ class ServingEngine:
         )
         self._requests: List[Request] = []
         self.stats: Dict[str, float] = {
-            "prefill_tokens": 0, "decode_steps": 0, "prefill_s": 0.0,
-            "decode_s": 0.0,
+            "prefill_tokens": 0, "decode_steps": 0, "decode_tokens": 0,
+            "prefill_s": 0.0, "decode_s": 0.0,
         }
+
+    @property
+    def prefill_tok_s(self) -> float:
+        """Prompt tokens ingested per second of prefill wall-clock."""
+        s = self.stats["prefill_s"]
+        return self.stats["prefill_tokens"] / s if s > 0 else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Tokens generated per second of decode-loop wall-clock."""
+        s = self.stats["decode_s"]
+        return self.stats["decode_tokens"] / s if s > 0 else 0.0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> Request:
@@ -99,8 +112,22 @@ class ServingEngine:
         with self._dctx():
             logits, cache = self._prefill(self.params, cache, jnp.asarray(prompts))
         logits = np.asarray(logits.astype(jnp.float32))
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += B * S
+        m = metrics()
+        m.inc("serve.prefill_tokens", B * S, model=self.cfg.name)
+        m.observe("serve.prefill_s", dt, model=self.cfg.name)
+        m.gauge("serve.prefill_tok_s", self.prefill_tok_s, model=self.cfg.name)
+        if trace_enabled():
+            emit(
+                "serve.prefill",
+                model=self.cfg.name,
+                batch=B,
+                tokens=B * S,
+                dur_s=round(dt, 6),
+                tok_s=round(B * S / dt, 3) if dt > 0 else None,
+            )
         nxt = np.array(
             [self._sample(logits[j, 0], r.temperature) for j, r in enumerate(reqs)],
             np.int32,
@@ -108,14 +135,21 @@ class ServingEngine:
         for j, r in enumerate(reqs):
             r.generated.append(int(nxt[j]))
         max_new = max(r.max_new_tokens for r in reqs)
+        new_tokens = 0
         t0 = time.perf_counter()
         for step in range(max_new - 1):
+            t_step = time.perf_counter()
             with self._dctx():
                 logits, cache = self._decode(
                     self.params, cache, jnp.asarray(nxt[:, None])
                 )
             self.stats["decode_steps"] += 1
             la = np.asarray(logits[:, 0].astype(jnp.float32))
+            m.observe(
+                "serve.decode_step_s",
+                time.perf_counter() - t_step,
+                model=self.cfg.name,
+            )
             nxt = np.array(
                 [self._sample(la[j], r.temperature) for j, r in enumerate(reqs)],
                 np.int32,
@@ -123,6 +157,22 @@ class ServingEngine:
             for j, r in enumerate(reqs):
                 if len(r.generated) < r.max_new_tokens:
                     r.generated.append(int(nxt[j]))
-        self.stats["decode_s"] += time.perf_counter() - t0
+                    new_tokens += 1
+        dt = time.perf_counter() - t0
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += new_tokens
+        m.inc("serve.decode_tokens", new_tokens, model=self.cfg.name)
+        m.observe("serve.decode_s", dt, model=self.cfg.name)
+        m.gauge("serve.decode_tok_s", self.decode_tok_s, model=self.cfg.name)
+        if trace_enabled():
+            emit(
+                "serve.decode",
+                model=self.cfg.name,
+                batch=B,
+                steps=max_new - 1,
+                tokens=new_tokens,
+                dur_s=round(dt, 6),
+                tok_s=round(new_tokens / dt, 3) if dt > 0 else None,
+            )
         for r in reqs:
             r.done = True
