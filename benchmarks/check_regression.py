@@ -22,6 +22,14 @@ coverage: ``--min-dispatch-hit-rate 0.05`` fails when the trace-derived
 ``mode="best"`` hit rate drops below the floor — a broken dispatch path
 shows up here even when forward timings stay plausible.
 
+With ``--serving`` the gate instead reads a ``BENCH_serving.json``
+(``benchmarks/serving_load.py`` output): the tuned/untuned decode tok/s
+ratio must clear ``--min-decode-ratio`` (after ``--tolerance``), and the
+run must have actually dispatched at least one decode-shape attention
+task *and* one decode-shape dense/batch_matmul task — decode dispatch
+silently regressing to the reference path would leave throughput
+plausible but untuned.
+
 Usage::
 
     python benchmarks/check_regression.py [BENCH_end_to_end.json]
@@ -29,6 +37,8 @@ Usage::
         [--require-dispatched-op attention]
         [--require-dispatched-op batch_matmul]
         [--report BENCH_tuning_report.json --min-dispatch-hit-rate 0.05]
+    python benchmarks/check_regression.py BENCH_serving.json --serving
+        [--min-decode-ratio 1.0] [--tolerance 0.05]
 """
 
 from __future__ import annotations
@@ -62,6 +72,47 @@ def check_report(path: Path, min_dispatch_hit_rate: float) -> "list[str]":
             f"dispatch hit rate {rate:.3f} < floor {min_dispatch_hit_rate:.3f}"
         ]
     return []
+
+
+def check_serving(
+    path: Path,
+    min_decode_ratio: float = 1.0,
+    tolerance: float = 0.05,
+) -> int:
+    """Gate a ``serving_load.py`` payload: decode throughput ratio plus
+    decode-shape dispatch coverage (attention AND dense/bmm)."""
+    payload = json.loads(Path(path).read_text())
+    failures = []
+    ratio = float(payload.get("decode_ratio", 0.0))
+    floor = min_decode_ratio * (1.0 - tolerance)
+    status = "ok" if ratio >= floor else "REGRESSION"
+    print(
+        f"{payload.get('model', '?')}: decode tuned/untuned="
+        f"{ratio:.3f}x (floor {floor:.3f}x, "
+        f"tuned={payload.get('tuned', {}).get('decode_tok_s')} tok/s, "
+        f"untuned={payload.get('untuned', {}).get('decode_tok_s')} tok/s) "
+        f"[{status}]"
+    )
+    if ratio < floor:
+        failures.append(f"decode tok/s ratio {ratio:.3f}x < floor {floor:.3f}x")
+    keys = payload.get("decode_dispatch_keys", [])
+    ops = {k.split("/", 1)[0] for k in keys}
+    print(f"decode dispatch keys: {len(keys)} ({', '.join(sorted(ops)) or 'none'})")
+    if "attention_decode" not in ops:
+        failures.append(
+            "no decode-shape attention task dispatched "
+            f"(keys: {keys or 'none'})"
+        )
+    if not ops & {"dense", "batch_matmul"}:
+        failures.append(
+            "no decode-shape dense/batch_matmul task dispatched "
+            f"(keys: {keys or 'none'})"
+        )
+    if failures:
+        print("FAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("serving gate passed")
+    return 0
 
 
 def check(
@@ -143,7 +194,28 @@ def main(argv=None) -> int:
         help="floor on the report's mode='best' dispatch hit rate "
              "(requires --report)",
     )
+    ap.add_argument(
+        "--serving", action="store_true",
+        help="treat json_path as BENCH_serving.json and gate the decode "
+             "ratio + decode dispatch coverage instead",
+    )
+    ap.add_argument(
+        "--min-decode-ratio", type=float, default=1.0,
+        help="floor on tuned/untuned decode tok/s (with --serving)",
+    )
     args = ap.parse_args(argv)
+    if args.serving:
+        rc = check_serving(
+            Path(args.json_path),
+            min_decode_ratio=args.min_decode_ratio,
+            tolerance=args.tolerance,
+        )
+        if args.report:
+            msgs = check_report(Path(args.report), args.min_dispatch_hit_rate)
+            if msgs:
+                print("FAIL:\n  " + "\n  ".join(msgs))
+                rc = rc or 1
+        return rc
     return check(
         Path(args.json_path),
         min_speedup=args.min_speedup,

@@ -287,6 +287,67 @@ def lower_attention(
     return fn, meta
 
 
+DEFAULT_DECODE_KV_BLOCK = 128  # pre-tuning fixed decode kv tile
+
+
+def extract_decode_kv_block(sch: Schedule) -> Optional[int]:
+    """block_kv = the j (kv) tile extent of the decode scores block."""
+    for n in iter_nodes(sch.root):
+        if isinstance(n, BlockNode) and n.block.name == "scores":
+            per_axis = _per_axis_tile(sch, n)
+            bkv = per_axis.get("j", 1)
+            return bkv if bkv > 1 else None
+    return None
+
+
+def lower_attention_decode(
+    sch: Schedule, *, interpret: bool = True
+) -> Tuple[Callable, Dict[str, Any]]:
+    """Tuned single-token decode attention via the Pallas decode kernel.
+
+    The decode workload has no query tiling (s_q = 1: the GQA group rides
+    whole in one tile), so the only tunable block is the kv tile — the
+    sampled ``j`` extent of the ``scores`` block, snapped to a divisor of
+    the cache length.  The dynamic mask arrives as the workload's BIAS
+    input, passed straight through to the kernel.
+    """
+    from ..kernels.flash_attention import decode_flash_attention
+
+    func = sch.func
+    Q = func.inputs[0]
+    b, kvh, g, d = Q.shape
+    t = func.inputs[1].shape[2]
+    softcap = None
+    for part in func.name.split("_"):
+        if part.startswith("t") and part != "t":
+            try:
+                softcap = float(part[1:])
+            except ValueError:
+                pass
+    sampled = extract_decode_kv_block(sch)
+    (bkv,) = snap_blocks((t,), (sampled or DEFAULT_DECODE_KV_BLOCK,))
+    _check_grid(b * kvh * (t // bkv), (bkv,))
+    meta = _block_meta(
+        "decode_flash_attention",
+        None if sampled is None else (sampled,),
+        (bkv,),
+    )
+
+    def fn(inputs: Dict):
+        out = decode_flash_attention(
+            inputs["Q"],
+            inputs["K"],
+            inputs["V"],
+            inputs["BIAS"],
+            softcap=softcap,
+            block_kv=bkv,
+            interpret=interpret,
+        )
+        return {func.outputs[0].name: out}
+
+    return fn, meta
+
+
 def _block_meta(kernel: str, sampled, snapped) -> Dict[str, Any]:
     meta: Dict[str, Any] = {
         "pallas_kernel": kernel,
@@ -313,6 +374,10 @@ def lower_to_pallas(
     name = sch.func.name
     if name.startswith("dense_"):
         return lower_dense(sch, interpret=interpret)
+    if name.startswith("attention_decode"):
+        # must route before the generic attention_ prefix: the prefill
+        # flash lowering assumes a 5-D square-sequence Q
+        return lower_attention_decode(sch, interpret=interpret)
     if name.startswith("attention_"):
         return lower_attention(sch, interpret=interpret)
     if name == "batch_matmul":

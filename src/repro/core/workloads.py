@@ -882,6 +882,139 @@ def attention(
     )
 
 
+@register("attention_decode")
+def attention_decode(
+    b: int = 4,
+    h: int = 4,
+    kvh: int = 0,
+    t: int = 128,
+    d: int = 64,
+    softcap: float = 0.0,
+    dtype: str = "float32",
+) -> PrimFunc:
+    """Single-token decode attention against a length-``t`` KV cache.
+
+    The serving-decode counterpart of :func:`attention`: one query token
+    per sequence (``s_q = 1``, so the query drops its sequence axis — Q is
+    (b, kvh, g, d)) attends to the full fixed-shape cache K/V
+    (b, kvh, t, d).  The program is static in the cache length ``t``; the
+    *dynamic* part of decode — per-slot valid lengths, ring-buffer
+    wraparound, sliding windows — arrives as data through the additive
+    ``BIAS`` (b, t) input (0 for attendable positions, -1e30 for masked),
+    which the dispatch layer computes from the traced positions at call
+    time.  That is what lets one tuned kernel serve every decode step of a
+    continuous-batching scheduler regardless of where each slot is in its
+    sequence.
+
+    Blocks mirror :func:`attention`: scores (matmul over d), scale /
+    softcap + bias add, the 4-block row softmax over ``t``, and the value
+    contraction.  The tunable payload is the ``j`` (kv) tile of the
+    ``scores`` block — the decode flash kernel's ``block_kv``.
+    """
+    kvh = int(kvh) or int(h)
+    if h % kvh:
+        raise ValueError(f"attention_decode: h={h} not divisible by kvh={kvh}")
+    g = h // kvh
+    scale = 1.0 / float(d) ** 0.5
+    softcap = float(softcap)
+    Q = Buffer("Q", (b, kvh, g, d), dtype)
+    K = Buffer("K", (b, kvh, t, d), dtype)
+    V = Buffer("V", (b, kvh, t, d), dtype)
+    BIAS = Buffer("BIAS", (b, t), dtype)
+    S = Buffer("S", (b, kvh, g, t), dtype)
+    spatial = (Axis("bb", b), Axis("kv", kvh), Axis("gg", g))
+    scores = Block(
+        name="scores",
+        axes=spatial + (Axis("j", t), Axis("dd", d, REDUCE)),
+        expr=mul(load(Q, "bb", "kv", "gg", "dd"), load(K, "bb", "kv", "j", "dd")),
+        write=S,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("j")),
+        reduce_op="add",
+    )
+    if softcap:
+        scored: Expr = mul(
+            const(softcap),
+            UnOp(
+                "tanh",
+                mul(load(S, "bb", "kv", "gg", "j"), const(scale / softcap)),
+            ),
+        )
+    else:
+        scored = mul(load(S, "bb", "kv", "gg", "j"), const(scale))
+    M = Buffer("M", (b, kvh, g, t), dtype)
+    mask_blk = Block(
+        name="mask",
+        axes=spatial + (Axis("j", t),),
+        expr=add(scored, load(BIAS, "bb", "j")),
+        write=M,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("j")),
+    )
+    Mx = Buffer("rowmax", (b, kvh, g), dtype)
+    E = Buffer("expv", (b, kvh, g, t), dtype)
+    Sm = Buffer("rowsum", (b, kvh, g), dtype)
+    P = Buffer("P", (b, kvh, g, t), dtype)
+    O = Buffer("O", (b, kvh, g, d), dtype)
+    rowmax = Block(
+        name="rowmax",
+        axes=spatial + (Axis("j", t, REDUCE),),
+        expr=load(M, "bb", "kv", "gg", "j"),
+        write=Mx,
+        write_indices=(_v("bb"), _v("kv"), _v("gg")),
+        reduce_op="max",
+        init=-1e30,
+    )
+    expv = Block(
+        name="expv",
+        axes=spatial + (Axis("j", t),),
+        expr=UnOp(
+            "exp",
+            BinOp(
+                "sub",
+                load(M, "bb", "kv", "gg", "j"),
+                load(Mx, "bb", "kv", "gg"),
+            ),
+        ),
+        write=E,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("j")),
+    )
+    rowsum = Block(
+        name="rowsum",
+        axes=spatial + (Axis("j", t, REDUCE),),
+        expr=load(E, "bb", "kv", "gg", "j"),
+        write=Sm,
+        write_indices=(_v("bb"), _v("kv"), _v("gg")),
+        reduce_op="add",
+    )
+    divide = Block(
+        name="divide",
+        axes=spatial + (Axis("j", t),),
+        expr=BinOp(
+            "div",
+            load(E, "bb", "kv", "gg", "j"),
+            load(Sm, "bb", "kv", "gg"),
+        ),
+        write=P,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("j")),
+    )
+    out = Block(
+        name="out",
+        axes=spatial + (Axis("d2", d), Axis("j", t, REDUCE)),
+        expr=mul(load(P, "bb", "kv", "gg", "j"), load(V, "bb", "kv", "j", "d2")),
+        write=O,
+        write_indices=(_v("bb"), _v("kv"), _v("gg"), _v("d2")),
+        reduce_op="add",
+    )
+    name = "attention_decode"
+    if softcap:
+        name += f"_t{softcap:g}"
+    return PrimFunc(
+        name,
+        (Q, K, V, BIAS),
+        (O,),
+        (scores, mask_blk, rowmax, expv, rowsum, divide, out),
+    )
+
+
 @register("fused_dense")
 def fused_dense(
     m: int = 128, n: int = 3072, k: int = 768, dtype: str = "float32"
@@ -926,4 +1059,5 @@ REDUCED_KWARGS: Dict[str, Dict] = {
     "fused_dense": dict(m=32, n=64, k=32),
     "rmsnorm": dict(tokens=16, d=32),
     "attention": dict(b=1, h=2, kvh=1, s=16, d=8),
+    "attention_decode": dict(b=2, h=2, kvh=1, t=16, d=8),
 }

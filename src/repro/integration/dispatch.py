@@ -119,6 +119,7 @@ class DispatchContext:
             "misses": 0,
             "attention_fused": 0,
             "attention_tuned": 0,
+            "attention_decode_tuned": 0,
         }
         self.hits_by_key: Dict[str, int] = {}
         # per-key outcome table with labeled reasons — the two bare
@@ -190,6 +191,7 @@ class DispatchContext:
             name, _ = parse_workload_key(key)
             mxu = self.use_mxu and name in (
                 "dense", "batch_matmul", "gmm", "attention",
+                "attention_decode",
             )
         space = SpaceGenerator(default_modules(use_mxu=mxu))
         sch = first_valid_schedule(func, space, self.default_seed_scan)
@@ -507,6 +509,90 @@ class DispatchContext:
         self.stats["attention_fused"] += 1
         self._note("fallback", None, "attention", "backend_fused")
         return _with_reference_grad(kernel_fn, ref)(q, k, v)
+
+    def decode_attention(
+        self,
+        q: jnp.ndarray,  # (B, H, 1, D)
+        k: jnp.ndarray,  # (B, KVH, T, D) — full fixed-shape cache
+        v: jnp.ndarray,
+        *,
+        length: Any,  # traced valid length: scalar or per-slot (B,)
+        window: Optional[Any] = None,
+        softcap: Optional[float] = None,
+        scale: Optional[float] = None,
+    ) -> Optional[jnp.ndarray]:
+        """Tuned single-token decode attention (serving).
+
+        Serves ``attention_decode`` records keyed by the *static* shape
+        ``(b, h, kvh, t, d, softcap)`` — ``t`` is the fixed cache length,
+        so the key is position-independent.  The dynamic part of decode
+        (traced per-slot lengths, the layer's static window) folds into an
+        additive bias computed as data at call time and fed to the kernel
+        as the workload's BIAS input: one tuned kernel serves every decode
+        step of a continuous-batching arena, which is what finally lets
+        nonzero-position attention dispatch instead of falling back.
+        """
+        B, H, S, D = (int(s) for s in q.shape)
+        KVH, T = int(k.shape[1]), int(k.shape[2])
+        if S != 1 or v.shape != k.shape or H % KVH != 0:
+            self._note("fallback", None, "attention_decode", "shape_mismatch")
+            return None
+        if isinstance(window, jax.core.Tracer):
+            self._note("fallback", None, "attention_decode", "traced_window")
+            return None
+        if softcap is not None and isinstance(softcap, jax.core.Tracer):
+            self._note("fallback", None, "attention_decode", "traced_softcap")
+            return None
+        if scale is not None and abs(scale - D**-0.5) > 1e-12:
+            self._note(
+                "fallback", None, "attention_decode", "nondefault_scale"
+            )
+            return None
+        key = workload_key(
+            "attention_decode", b=B, h=H, kvh=KVH, t=T, d=D,
+            softcap=float(softcap or 0.0),
+        )
+        kern = self._lookup(key, "attention_decode")
+        if kern is None:
+            return None
+        G = H // KVH
+        w = int(window or 0)
+        # mask as data: 0 where attendable, -1e30 where not.  Matches the
+        # reference exactly — position < length, and inside the window
+        # when the layer is local (ring wraparound approximated by slot,
+        # like the reference path).
+        pos = jnp.arange(T)
+        lv = jnp.broadcast_to(jnp.asarray(length), (B,))
+        valid = pos[None, :] < lv[:, None]
+        if w > 0:
+            valid = valid & (pos[None, :] > lv[:, None] - 1 - w)
+        bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+        if kern.grad_fn is None:
+            scale_v = D**-0.5
+
+            def fwd_kernel(q4, k2, v2, b2):
+                return kern.fn({"Q": q4, "K": k2, "V": v2, "BIAS": b2})[
+                    kern.out_name
+                ]
+
+            def ref(q4, k2, v2, b2):
+                s = jnp.einsum(
+                    "bkgd,bktd->bkgt", q4, k2,
+                    preferred_element_type=jnp.float32,
+                ) * scale_v
+                if softcap:
+                    s = softcap * jnp.tanh(s / softcap)
+                s = s + b2[:, None, None, :]
+                p = jax.nn.softmax(s, axis=-1)
+                return jnp.einsum("bkgt,bktd->bkgd", p, v2)
+
+            kern.grad_fn = _with_reference_grad(fwd_kernel, ref)
+        self.stats["attention_decode_tuned"] += 1
+        q4 = q.reshape(B, KVH, G, D).astype(jnp.float32)
+        out = kern.grad_fn(
+            q4, k.astype(jnp.float32), v.astype(jnp.float32), bias
+        )
+        return out.reshape(B, H, 1, D).astype(q.dtype)
 
     def rmsnorm(
         self, x: jnp.ndarray, w: jnp.ndarray, eps: float

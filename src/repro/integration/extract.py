@@ -33,6 +33,7 @@ import jax
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..core.workloads import get_workload
+from ..obs import emit, metrics, trace_enabled
 from ..search.database import workload_key
 from ..search.measure.hashing import primfunc_structural_hash
 from ..search.task_scheduler import TuneTask
@@ -41,6 +42,22 @@ TOKEN_TILE = 128  # default representative token block (batch=1 x seq=128)
 
 # ops the extractor understands; everything else is skipped
 EXTRACTABLE_OPS = ("dense", "batch_matmul", "rmsnorm", "sfm", "attention")
+
+# ops extracted from the decode trace (serving): dense/bmm keyed on
+# m = batch, plus the single-token cache-attention workload.  sfm is
+# omitted — decode softmax rows ride inside attention_decode.
+DECODE_EXTRACTABLE_OPS = (
+    "dense", "batch_matmul", "rmsnorm", "attention_decode",
+)
+
+
+def _skip(site: str, reason: str) -> None:
+    """Dropped-site telemetry: every site the extractor cannot express is
+    dispatch coverage lost, so it must be visible (metrics counter always,
+    ``extract.skip`` trace event when tracing) instead of silent."""
+    metrics().inc("extract.skip", site=site, reason=reason)
+    if trace_enabled():
+        emit("extract.skip", site=site, reason=reason)
 
 
 @dataclass
@@ -76,7 +93,9 @@ class ExtractedTask:
 
     def to_tune_task(self, use_mxu: bool = True) -> TuneTask:
         func = get_workload(self.op, **self.kwargs)
-        mxu = use_mxu and self.op in ("dense", "batch_matmul", "attention")
+        mxu = use_mxu and self.op in (
+            "dense", "batch_matmul", "attention", "attention_decode",
+        )
         return TuneTask(key=self.key, func=func, weight=self.weight, use_mxu=mxu)
 
 
@@ -110,7 +129,8 @@ class AttentionSiteRecorder:
     sites: List[Dict[str, Any]] = field(default_factory=list)
 
     def add(
-        self, *, q_shape, kvh, kv_seq, causal, window, softcap, scale, q_offset
+        self, *, q_shape, kvh, kv_seq, causal, window, softcap, scale,
+        q_offset, kind: str = "prefill",
     ) -> None:
         traced = jax.core.Tracer
         self.sites.append(
@@ -131,6 +151,7 @@ class AttentionSiteRecorder:
                 q_offset=(
                     "traced" if isinstance(q_offset, traced) else int(q_offset)
                 ),
+                kind=kind,  # "prefill" (chunked_attention) | "decode"
             )
         )
 
@@ -161,6 +182,7 @@ def attention_sites(
     """
     from ..models.transformer import layer_windows
 
+    recorded = [r for r in recorded if r.get("kind", "prefill") == "prefill"]
     windows = layer_windows(cfg)
     rec_by_window: Dict[int, int] = {}
     for r in recorded:
@@ -171,18 +193,32 @@ def attention_sites(
             rec_by_window[w] = rec_by_window.get(w, 0) + 1
     sites: List[TaskSite] = []
     for r in recorded:
-        if "traced" in (r["window"], r["softcap"], r["q_offset"]):
+        if r["window"] == "traced":
+            _skip("attention", "traced_window")
+            continue
+        if r["softcap"] == "traced":
+            _skip("attention", "traced_softcap")
+            continue
+        if r["q_offset"] == "traced":
+            _skip("attention", "traced_offset")
             continue
         if r["q_offset"] != 0:
+            _skip("attention", "decode_offset")
             continue
         B, H, S, D = r["q_shape"]
         KVH = r["kvh"]
-        if r["kv_seq"] != S or H % KVH != 0:
-            continue  # cross-attention (S != T) / ragged GQA: chunked path
+        if r["kv_seq"] != S:
+            _skip("attention", "cross_attention")
+            continue  # cross-attention (S != T): chunked path
+        if H % KVH != 0:
+            _skip("attention", "ragged_gqa")
+            continue
         if r["scale"] is not None and abs(r["scale"] - D**-0.5) > 1e-12:
+            _skip("attention", "nondefault_scale")
             continue
         w = r["window"]
         if w and not r["causal"]:
+            _skip("attention", "noncausal_window")
             continue  # the workload's window mask implies causality
         if w >= S:
             w = 0  # a window covering the whole sequence IS global
@@ -210,6 +246,60 @@ def attention_sites(
             )
         )
     return sites
+
+
+def decode_attention_sites(
+    cfg: ModelConfig, recorded: List[Dict[str, Any]]
+) -> List[TaskSite]:
+    """Weighted ``attention_decode`` TaskSites from decode-trace records.
+
+    Every single-token cache-attention call (self-attention at its ring
+    slot, cross-attention against a static encoder cache) maps to the same
+    workload: the key holds only the static shape (b, h, kvh, t, d,
+    softcap) — the window and the traced per-slot lengths ride in as BIAS
+    data at dispatch time, so layers differing only in window share one
+    tuned kernel.  Scan multiplicity is restored per distinct shape: a
+    periodic layer scan traces its body once per period-group, so each
+    record sharing a shape carries ``n_layers / n_records`` layers.
+    """
+    recs = [r for r in recorded if r.get("kind") == "decode"]
+    kept: List[Dict[str, Any]] = []
+    for r in recs:
+        B, H, S, D = r["q_shape"]
+        if r["window"] == "traced":
+            _skip("attention_decode", "traced_window")
+            continue
+        if r["softcap"] == "traced":
+            _skip("attention_decode", "traced_softcap")
+            continue
+        if S != 1:
+            _skip("attention_decode", "not_single_token")
+            continue
+        if H % r["kvh"] != 0:
+            _skip("attention_decode", "ragged_gqa")
+            continue
+        if r["scale"] is not None and abs(r["scale"] - D**-0.5) > 1e-12:
+            _skip("attention_decode", "nondefault_scale")
+            continue
+        kept.append(
+            dict(
+                b=B, h=H, kvh=r["kvh"], t=r["kv_seq"], d=D,
+                softcap=float(r["softcap"]),
+            )
+        )
+    by_shape: Dict[Tuple, int] = {}
+    for kw in kept:
+        sig = tuple(sorted(kw.items()))
+        by_shape[sig] = by_shape.get(sig, 0) + 1
+    Ln = max(int(cfg.n_layers), 1)
+    return [
+        TaskSite(
+            "attention_decode", kw,
+            Ln / by_shape[tuple(sorted(kw.items()))],
+            dispatchable=True,
+        )
+        for kw in kept
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -352,6 +442,9 @@ def _task_flops(op: str, kw: Dict[str, Any]) -> int:
     if op == "attention":
         # scores + value contractions (softmax flops are second-order)
         return 4 * kw["b"] * kw["h"] * kw["s"] * kw["s"] * kw["d"]
+    if op == "attention_decode":
+        # one query token against a length-t cache
+        return 4 * kw["b"] * kw["h"] * kw["t"] * kw["d"]
     return 0
 
 
@@ -453,27 +546,113 @@ def extract_task_specs(
     if dispatchable_only:
         sites = [s for s in sites if s.dispatchable]
     tasks = dedup_sites(sites, min_task_elems=min_task_elems)
-    if max_tasks > 0 and len(tasks) > max_tasks:
-        dropped = tasks[max_tasks:]
-        tasks = tasks[:max_tasks]
-        # the weight x flops ranking undervalues attention (its cost is
-        # softmax + memory traffic, not just matmul flops), and it is the
-        # one op class whose blocks only tune through its own task — keep
-        # the heaviest attention task alive under the cap
-        if (
-            "attention" in ops
-            and any(d.op == "attention" for d in dropped)
-            and not any(t.op == "attention" for t in tasks)
-        ):
-            kept_attn = next(d for d in dropped if d.op == "attention")
-            dropped = [d for d in dropped if d is not kept_attn]
-            tasks[-1], dropped = kept_attn, dropped + [tasks[-1]]
-        # no silent caps: record what fell off the end
-        import logging
+    return _apply_max_tasks(cfg, tasks, max_tasks, ops, "attention")
 
-        logging.getLogger(__name__).info(
-            "extract_tasks(%s): kept %d tasks, dropped %d (%s)",
-            cfg.name, len(tasks), len(dropped),
-            ", ".join(d.key for d in dropped),
-        )
+
+def _apply_max_tasks(
+    cfg: ModelConfig,
+    tasks: List[ExtractedTask],
+    max_tasks: int,
+    ops: Tuple[str, ...],
+    attn_op: str,
+) -> List[ExtractedTask]:
+    if max_tasks <= 0 or len(tasks) <= max_tasks:
+        return tasks
+    dropped = tasks[max_tasks:]
+    tasks = tasks[:max_tasks]
+    # the weight x flops ranking undervalues attention (its cost is
+    # softmax + memory traffic, not just matmul flops), and it is the
+    # one op class whose blocks only tune through its own task — keep
+    # the heaviest attention task alive under the cap
+    if (
+        attn_op in ops
+        and any(d.op == attn_op for d in dropped)
+        and not any(t.op == attn_op for t in tasks)
+    ):
+        kept_attn = next(d for d in dropped if d.op == attn_op)
+        dropped = [d for d in dropped if d is not kept_attn]
+        tasks[-1], dropped = kept_attn, dropped + [tasks[-1]]
+    # no silent caps: record what fell off the end
+    import logging
+
+    logging.getLogger(__name__).info(
+        "extract_tasks(%s): kept %d tasks, dropped %d (%s)",
+        cfg.name, len(tasks), len(dropped),
+        ", ".join(d.key for d in dropped),
+    )
     return tasks
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving) entry point
+# ---------------------------------------------------------------------------
+
+
+def model_decode_jaxpr(
+    cfg: ModelConfig, batch: int = 4, max_seq: int = TOKEN_TILE
+):
+    """Abstractly trace one ``decode_step`` in the continuous-batching
+    arena layout: a per-slot ``(batch,)`` position vector, one token per
+    slot, the fixed-shape KV cache of ``max_seq``.  This is the program
+    the serving scheduler actually runs every tick — dense/bmm sites key
+    on ``m = batch`` and attention reaches the recorder as single-token
+    cache attention."""
+    import jax.numpy as jnp
+
+    from ..models import transformer as T
+
+    params = T.param_specs(cfg)
+    cache = dict(jax.eval_shape(lambda: T.init_cache(cfg, batch, max_seq)))
+    cache["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    toks = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return jax.make_jaxpr(lambda p, c, t: T.decode_step(cfg, p, c, t))(
+        params, cache, toks
+    )
+
+
+def extract_decode_task_specs(
+    cfg: ModelConfig,
+    batch: int = 4,
+    max_seq: int = TOKEN_TILE,
+    min_task_elems: int = 1024,
+    max_tasks: int = 0,
+    ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
+    dispatchable_only: bool = False,
+) -> List[ExtractedTask]:
+    """Decode-shape tuning tasks for a serving configuration.
+
+    The decode counterpart of :func:`extract_task_specs`: same walk, same
+    dedup, but over :func:`model_decode_jaxpr` — so the extracted keys are
+    exactly what :class:`~repro.integration.dispatch.DispatchContext`
+    looks up at serving-decode trace time.  ``min_task_elems`` defaults
+    lower than prefill because decode shapes are small by construction
+    (m = batch, not batch x seq) yet run every generated token.
+    """
+    recorder = AttentionSiteRecorder()
+    with recorder:
+        jaxpr = model_decode_jaxpr(cfg, batch=batch, max_seq=max_seq)
+    sites = sites_from_jaxpr(jaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps)
+    sites += decode_attention_sites(cfg, recorder.sites)
+    sites = [s for s in sites if s.op in ops]
+    if dispatchable_only:
+        sites = [s for s in sites if s.dispatchable]
+    tasks = dedup_sites(sites, min_task_elems=min_task_elems)
+    return _apply_max_tasks(cfg, tasks, max_tasks, ops, "attention_decode")
+
+
+def extract_decode_tasks(
+    cfg: ModelConfig,
+    batch: int = 4,
+    max_seq: int = TOKEN_TILE,
+    use_mxu: bool = True,
+    min_task_elems: int = 1024,
+    max_tasks: int = 0,
+    ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
+    dispatchable_only: bool = False,
+) -> List[TuneTask]:
+    """Like :func:`extract_decode_task_specs` but returns ``TuneTask``s."""
+    extracted = extract_decode_task_specs(
+        cfg, batch=batch, max_seq=max_seq, min_task_elems=min_task_elems,
+        max_tasks=max_tasks, ops=ops, dispatchable_only=dispatchable_only,
+    )
+    return [t.to_tune_task(use_mxu=use_mxu) for t in extracted]

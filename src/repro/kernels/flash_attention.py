@@ -165,3 +165,120 @@ def flash_attention(
         v.reshape(B * KVH, S, D),
     )
     return out.reshape(B, H, S, D)
+
+
+def _decode_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    b_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    nkv: int,
+    scale: float,
+    softcap: Optional[float],
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (g, d)
+    k = k_ref[0]  # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    # the mask is pure data: an additive (bkv,) bias row — 0 attendable,
+    # -1e30 not — computed by the caller from the per-slot lengths
+    s = s + b_ref[0][None, :]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def decode_flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-token decode attention over a fixed-shape KV cache.
+
+    q: (B, KVH, G, D) — one query token per sequence, GQA-grouped;
+    k, v: (B, KVH, T, D) — the full cache; bias: (B, T) additive mask
+    (0 attendable / -1e30 masked), shared across heads.  Returns
+    (B, KVH, G, D).  Only the kv axis is blocked (``block_kv``); the G
+    query rows of a kv head ride in one tile — decode's whole q extent.
+    """
+    B, KVH, G, D = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    bkv = best_divisor(T, min(block_kv, T))
+    nkv = T // bkv
+    kernel = functools.partial(
+        _decode_kernel, nkv=nkv, scale=scale, softcap=softcap
+    )
+    grid = (B * KVH, nkv)  # (batch*kv head, kv blocks — sequential)
+
+    def qmap(bh, ki):
+        return (bh, 0, 0)
+
+    def kvmap(bh, ki):
+        return (bh, ki, 0)
+
+    def bmap(bh, ki):
+        return (bh // KVH, ki)  # bias is per sequence, shared across heads
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, D), qmap),
+            pl.BlockSpec((1, bkv, D), kvmap),
+            pl.BlockSpec((1, bkv, D), kvmap),
+            pl.BlockSpec((1, bkv), bmap),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(
+        q.reshape(B * KVH, G, D),
+        k.reshape(B * KVH, T, D),
+        v.reshape(B * KVH, T, D),
+        bias,
+    )
+    return out.reshape(B, KVH, G, D)

@@ -276,15 +276,38 @@ def decode_attention(
     k: jnp.ndarray,  # (B, KVH, T, D) — full cache
     v: jnp.ndarray,
     *,
-    length: jnp.ndarray,  # current valid cache length (scalar int)
+    length: jnp.ndarray,  # valid cache length: scalar or per-slot (B,)
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
 ) -> jnp.ndarray:
-    """Single-token attention against a KV cache (serving decode)."""
+    """Single-token attention against a KV cache (serving decode).
+
+    ``length`` may be a scalar (legacy engine: every lane at the same
+    position) or a per-slot ``(B,)`` vector (continuous-batching arena:
+    each slot is at its own position).  Under an active DispatchContext
+    the whole call can swap to a tuned ``attention_decode`` kernel: the
+    program is static in the cache length ``T`` and the traced per-slot
+    lengths enter the kernel as an additive bias, so one tuned kernel
+    serves every decode step."""
     B, H, _, D = q.shape
     KVH, T = k.shape[1], k.shape[2]
     G = H // KVH
+    rec = _attn_recorder()
+    if rec is not None:
+        rec.add(
+            q_shape=tuple(q.shape), kvh=int(KVH), kv_seq=int(T),
+            causal=True, window=window, softcap=softcap, scale=scale,
+            q_offset=0, kind="decode",
+        )
+    ctx = _dispatch_ctx()
+    if ctx is not None:
+        tuned = ctx.decode_attention(
+            q, k, v, length=length, window=window, softcap=softcap,
+            scale=scale,
+        )
+        if tuned is not None:
+            return tuned
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     qg = q.reshape(B, KVH, G, D)
     s = jnp.einsum("bkgd,bktd->bkgt", qg, k, preferred_element_type=jnp.float32)
@@ -292,11 +315,12 @@ def decode_attention(
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     pos = jnp.arange(T)
-    mask = pos[None, :] < length
+    lv = jnp.broadcast_to(jnp.asarray(length), (B,))
+    mask = pos[None, :] < lv[:, None]  # (B, T)
     if window is not None:
         w = jnp.asarray(window)
-        mask = mask & ((w <= 0) | (pos[None, :] > length - 1 - w))
-    s = jnp.where(mask[None, None], s, -1e30)
+        mask = mask & ((w <= 0) | (pos[None, :] > lv[:, None] - 1 - w))
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", p.astype(v.dtype), v)
     return out.reshape(B, H, 1, D).astype(q.dtype)

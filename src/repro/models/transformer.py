@@ -517,19 +517,31 @@ def prefill(
 def decode_step(
     cfg: ModelConfig, params: PyTree, cache: PyTree, tokens: jnp.ndarray
 ) -> Tuple[jnp.ndarray, PyTree]:
-    """One decode step.  tokens: (B, 1) -> logits (B, 1, V), new cache."""
+    """One decode step.  tokens: (B, 1) -> logits (B, 1, V), new cache.
+
+    ``cache["pos"]`` is either a scalar — every lane at the same position,
+    the legacy batch-engine layout — or a per-slot ``(B,)`` vector, the
+    continuous-batching KV-arena layout where each slot advances
+    independently (writes land at per-lane ring slots, attention masks to
+    per-lane lengths).  Like forward()/prefill(), periodic per-layer
+    window patterns close Python-int windows over the scan body so the
+    decode attention dispatch hook sees static windows."""
     x = L.embed(tokens, params["embed"]) * math.sqrt(cfg.d_model)
     B = x.shape[0]
     p_now = cache["pos"]
-    pos = _positions(cfg, B, 1, offset=0) + p_now
+    per_slot = jnp.ndim(p_now) > 0
+    pos_vec = (
+        p_now if per_slot else jnp.broadcast_to(p_now, (B,))
+    ).astype(jnp.int32)
+    pos = pos_vec[:, None]  # (B, 1) rope positions
+    if cfg.mrope:
+        pos = jnp.stack([pos, pos, pos], axis=-1)  # text: t=h=w
     windows = layer_windows(cfg)
     kv_len = cache["k"].shape[3] if "k" in cache else 0
 
     scanned = {k: cache[k] for k in ("k", "v", "state", "xk", "xv") if k in cache}
 
-    def step(carry, inp):
-        p, w, sc = inp
-        x = carry
+    def layer_step(x, p, w_arg, sc):
         h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
         mix = jnp.zeros_like(x)
         new_sc = dict(sc)
@@ -537,21 +549,32 @@ def decode_step(
             q, k1, v1 = L.qkv_proj(p["attn"], h, cfg)
             q = _rope_q(cfg, q, pos)
             k1 = _rope_q(cfg, k1, pos)
-            slot = p_now % kv_len
-            K = jax.lax.dynamic_update_slice(
-                sc["k"], k1.astype(sc["k"].dtype), (0, 0, slot, 0)
-            )
-            V = jax.lax.dynamic_update_slice(
-                sc["v"], v1.astype(sc["v"].dtype), (0, 0, slot, 0)
-            )
+            if per_slot:
+                # each arena slot writes at its own ring position
+                slots = pos_vec % kv_len
+                bidx = jnp.arange(B)
+                K = sc["k"].at[bidx, :, slots].set(
+                    k1[:, :, 0, :].astype(sc["k"].dtype)
+                )
+                V = sc["v"].at[bidx, :, slots].set(
+                    v1[:, :, 0, :].astype(sc["v"].dtype)
+                )
+            else:
+                slot = p_now % kv_len
+                K = jax.lax.dynamic_update_slice(
+                    sc["k"], k1.astype(sc["k"].dtype), (0, 0, slot, 0)
+                )
+                V = jax.lax.dynamic_update_slice(
+                    sc["v"], v1.astype(sc["v"].dtype), (0, 0, slot, 0)
+                )
             new_sc["k"], new_sc["v"] = K, V
-            length = jnp.minimum(p_now + 1, kv_len)
+            length = jnp.minimum(pos_vec + 1, kv_len)
             # per-layer window: when the uniform stacked cache is longer
             # than a local layer's window (global layers force max length),
             # mask the excess; ring wraparound approximates window by slot.
             a = L.decode_attention(
                 q, K, V, length=length,
-                window=jnp.where(w > 0, w, 0),
+                window=w_arg,
                 softcap=cfg.attn_softcap,
             )
             a = a.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.head_dim)
@@ -588,7 +611,55 @@ def decode_step(
             x = x + f
         return x, new_sc
 
-    x, new_scanned = jax.lax.scan(step, x, (params["layers"], windows, scanned))
+    # same static-window scan as forward(); see the comment there
+    period = window_period(windows)
+    if period is None:
+
+        def step(carry, inp):
+            p, w, sc = inp
+            return layer_step(carry, p, jnp.where(w > 0, w, 0), sc)
+
+        x, new_scanned = jax.lax.scan(
+            step, x, (params["layers"], windows, scanned)
+        )
+    else:
+        win_static = [int(windows[j]) or None for j in range(period)]
+
+        def step(carry, inp):
+            lp, sc = inp
+            x = carry
+            if period == 1:
+                return layer_step(x, lp, win_static[0], sc)
+            outs = []
+            for j in range(period):
+                pj = jax.tree_util.tree_map(lambda a, j=j: a[j], lp)
+                scj = {key: v[j] for key, v in sc.items()}
+                x, new_scj = layer_step(x, pj, win_static[j], scj)
+                outs.append(new_scj)
+            stacked = {
+                key: jnp.stack([o[key] for o in outs]) for key in outs[0]
+            }
+            return x, stacked
+
+        if period == 1:
+            xs = (params["layers"], scanned)
+        else:
+            xs = (
+                _stack_period(params["layers"], period),
+                {
+                    key: v.reshape(
+                        (v.shape[0] // period, period) + v.shape[1:]
+                    )
+                    for key, v in scanned.items()
+                },
+            )
+        x, new_scanned = jax.lax.scan(step, x, xs)
+        if period > 1:
+            new_scanned = {
+                key: v.reshape((v.shape[0] * period,) + v.shape[2:])
+                for key, v in new_scanned.items()
+            }
+
     x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
     logits = L.unembed(x, params["embed"])
     if cfg.logit_softcap:

@@ -173,11 +173,22 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         key=lambda r: -r["latency_us"],
     )[:top_n]
 
+    # -- extraction skips (dispatch-coverage loss) ---------------------------
+    extract_skips: Optional[Dict[str, int]] = None
+    skips = by_type.get("extract.skip", [])
+    if skips:
+        extract_skips = {}
+        for e in skips:
+            key = f"{e.get('site', '?')}/{e.get('reason', '?')}"
+            extract_skips[key] = extract_skips.get(key, 0) + 1
+
     # -- serving -------------------------------------------------------------
     serving: Optional[Dict[str, Any]] = None
     prefills = by_type.get("serve.prefill", [])
     decodes = by_type.get("serve.decode", [])
-    if prefills or decodes:
+    admits = by_type.get("serve.admit", [])
+    evicts = by_type.get("serve.evict", [])
+    if prefills or decodes or admits or evicts:
         p_tok = sum(int(e.get("tokens", 0)) for e in prefills)
         p_s = sum(float(e.get("dur_s", 0.0)) for e in prefills)
         d_tok = sum(int(e.get("tokens", 0)) for e in decodes)
@@ -188,6 +199,25 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
             "decode_tokens": d_tok,
             "decode_tok_s": round(d_tok / d_s, 2) if d_s > 0 else None,
         }
+        if admits or evicts:
+            # scheduler lifecycle: admissions, completions, TTFT/latency
+            # quantiles from the per-request evict events
+            serving["requests_admitted"] = len(admits)
+            serving["requests_completed"] = len(evicts)
+            ttfts = sorted(
+                float(e["ttft_s"]) for e in evicts
+                if e.get("ttft_s") is not None
+            )
+            lats = sorted(
+                float(e["latency_s"]) for e in evicts
+                if e.get("latency_s") is not None
+            )
+            if ttfts:
+                serving["ttft_s_p50"] = round(ttfts[len(ttfts) // 2], 6)
+                serving["ttft_s_max"] = round(ttfts[-1], 6)
+            if lats:
+                serving["latency_s_p50"] = round(lats[len(lats) // 2], 6)
+                serving["latency_s_max"] = round(lats[-1], 6)
 
     return {
         "benchmark": "tuning_report",
@@ -204,6 +234,7 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         "cost_model": cost_model,
         "measure": measure,
         "dispatch": dispatch,
+        "extract_skips": extract_skips,
         "slowest": slowest,
         "serving": serving,
     }
@@ -276,6 +307,11 @@ def render_text(report: Dict[str, Any]) -> str:
         add(f"  {key}: hits={row['hits']} misses={row['misses']} "
             f"fallbacks={row['fallbacks']}{reasons}")
     add("")
+    if report.get("extract_skips"):
+        add("-- extraction skips (dispatch-coverage loss) --")
+        for key, n in sorted(report["extract_skips"].items()):
+            add(f"  {key}: {n}")
+        add("")
     if report["slowest"]:
         add("-- slowest measured candidates --")
         for r in report["slowest"]:
@@ -289,5 +325,13 @@ def render_text(report: Dict[str, Any]) -> str:
             f"{s['prefill_tok_s']} tok/s")
         add(f"  decode:  {s['decode_tokens']} tokens @ "
             f"{s['decode_tok_s']} tok/s")
+        if s.get("requests_completed") is not None:
+            add(f"  requests: admitted={s.get('requests_admitted')} "
+                f"completed={s['requests_completed']}")
+            if s.get("ttft_s_p50") is not None:
+                add(f"  ttft: p50={s['ttft_s_p50']}s max={s['ttft_s_max']}s")
+            if s.get("latency_s_p50") is not None:
+                add(f"  latency: p50={s['latency_s_p50']}s "
+                    f"max={s['latency_s_max']}s")
         add("")
     return "\n".join(lines)

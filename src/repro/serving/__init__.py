@@ -1,1 +1,3 @@
-from .engine import ServingEngine  # noqa: F401
+from .engine import Request, ServingEngine  # noqa: F401
+from .kv import KVArena, SlotPool  # noqa: F401
+from .scheduler import ContinuousBatchingScheduler, ServeRequest  # noqa: F401

@@ -134,16 +134,22 @@ class ServingEngine:
         )
         for j, r in enumerate(reqs):
             r.generated.append(int(nxt[j]))
+        for j, r in enumerate(reqs):
+            r.done = len(r.generated) >= r.max_new_tokens
         max_new = max(r.max_new_tokens for r in reqs)
         new_tokens = 0
+        steps_run = 0
         t0 = time.perf_counter()
         for step in range(max_new - 1):
+            if all(r.done for r in reqs):
+                break  # every request in flight finished: stop decoding
             t_step = time.perf_counter()
             with self._dctx():
                 logits, cache = self._decode(
                     self.params, cache, jnp.asarray(nxt[:, None])
                 )
             self.stats["decode_steps"] += 1
+            steps_run += 1
             la = np.asarray(logits[:, 0].astype(jnp.float32))
             m.observe(
                 "serve.decode_step_s",
@@ -158,6 +164,8 @@ class ServingEngine:
                 if len(r.generated) < r.max_new_tokens:
                     r.generated.append(int(nxt[j]))
                     new_tokens += 1
+                if len(r.generated) >= r.max_new_tokens:
+                    r.done = True
         dt = time.perf_counter() - t0
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += new_tokens
@@ -169,7 +177,7 @@ class ServingEngine:
                 "serve.decode",
                 model=self.cfg.name,
                 batch=B,
-                steps=max_new - 1,
+                steps=steps_run,
                 tokens=new_tokens,
                 dur_s=round(dt, 6),
                 tok_s=round(new_tokens / dt, 3) if dt > 0 else None,

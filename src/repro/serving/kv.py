@@ -1,0 +1,102 @@
+"""Shared fixed-shape KV arena + slot pool for continuous batching.
+
+The arena is one ``init_cache(n_slots, max_seq)`` allocation whose batch
+dimension is the slot pool: every decode step is a single compiled
+``decode_step`` call over all slots (static shapes — the paper's
+static-program contract), while each slot advances independently through
+a per-slot ``(n_slots,)`` position vector.  Admission copies a batch=1
+prefill cache into a free slot lane; release zeroes the lane and returns
+the slot to the free list.  Free lanes keep decoding garbage — their
+output is never sampled and their KV lane is fully overwritten on the
+next admission, so correctness only depends on per-lane row independence
+of the batched ops (masked per-slot attention, row-wise norms/matmuls).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax.numpy as jnp
+
+# cache entries with a (layers, batch/slot, ...) layout that admission
+# copies lane-by-lane; "pos" (per-slot scalar) is handled separately
+_LANE_KEYS = ("k", "v", "state", "xk", "xv")
+
+
+class SlotPool:
+    """Free-list slot allocator (lowest slot first, deterministic)."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot; raises IndexError when the pool is full."""
+        if not self._free:
+            raise IndexError("slot pool exhausted")
+        self._free.sort()
+        return self._free.pop(0)
+
+    def release(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} outside pool of {self.n_slots}")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self._free.append(slot)
+
+
+class KVArena:
+    """The shared cache all slots decode through.
+
+    ``model`` only needs ``init_cache(batch, max_seq)`` (the registry
+    Model API).  ``cache["pos"]`` is widened from the scalar the model
+    allocates to a per-slot vector — the layout ``decode_step`` detects
+    to switch to per-lane ring writes and per-lane length masking.
+    """
+
+    def __init__(self, model: Any, n_slots: int, max_seq: int):
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        cache = dict(model.init_cache(n_slots, max_seq))
+        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.cache: Dict[str, Any] = cache
+
+    @property
+    def positions(self) -> jnp.ndarray:
+        return self.cache["pos"]
+
+    def load_slot(self, slot: int, req_cache: Dict[str, Any]) -> None:
+        """Copy a batch=1 prefill cache into a slot lane (admission).
+
+        The prefill cache's kv length matches the arena's by construction
+        (both derive from the same config + max_seq), so this is a pure
+        lane copy plus the slot's position.
+        """
+        c = dict(self.cache)
+        for key in _LANE_KEYS:
+            if key in c:
+                lane = req_cache[key][:, 0].astype(c[key].dtype)
+                c[key] = c[key].at[:, slot].set(lane)
+        c["pos"] = c["pos"].at[slot].set(
+            jnp.asarray(req_cache["pos"], jnp.int32)
+        )
+        self.cache = c
+
+    def release_slot(self, slot: int) -> None:
+        """Zero a lane and reset its position (slot goes back to the pool)."""
+        c = dict(self.cache)
+        for key in _LANE_KEYS:
+            if key in c:
+                c[key] = c[key].at[:, slot].set(0)
+        c["pos"] = c["pos"].at[slot].set(0)
+        self.cache = c

@@ -1,0 +1,295 @@
+"""Continuous-batching serving scheduler over a slot-pool KV arena.
+
+Replaces the fixed ``max_batch``-stride loop of :class:`ServingEngine`
+with request-level scheduling:
+
+* **admission queue** — ``submit()`` enqueues; each tick admits requests
+  into free slots.  Admission prefills the request alone at its exact
+  prompt length (batch=1, no padding — token streams match the
+  sequential baseline bit-for-bit; distinct prompt lengths each compile
+  the prefill jit once) and copies the resulting cache into the slot.
+* **slot pool over a shared KV arena** — one fixed-shape cache whose
+  batch dim is the pool (:mod:`repro.serving.kv`); every decode tick is
+  a single compiled ``decode_step`` over all slots with per-slot
+  positions, so a prefill joins a *live* decode batch without a
+  full-batch barrier and without retracing.
+* **early release / recycling** — a request leaving at
+  ``max_new_tokens`` frees its slot immediately; the next queued request
+  takes it on the following tick while the other lanes keep decoding.
+
+Decode runs under the optional DispatchContext, so tuned
+``attention_decode`` / ``dense`` kernels (extracted via
+``extract_decode_tasks``) serve every generated token.
+
+Observability (``repro.obs``): ``serve.queue_depth`` /
+``serve.slot_utilization`` gauges, ``serve.admit`` / ``serve.evict``
+events, per-request time-to-first-token histogram ``serve.ttft_s``, and
+the same ``serve.prefill`` / ``serve.decode`` events the engine emits.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import build_model
+from ..obs import emit, metrics, trace_enabled
+from .kv import KVArena, SlotPool
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None
+    submit_s: float = 0.0  # perf_counter timestamps
+    admit_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit -> first generated token (the prefill sample)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submit_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.submit_s
+
+
+class ContinuousBatchingScheduler:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        n_slots: int = 4,
+        max_seq: int = 256,
+        seed: int = 0,
+        dispatch=None,  # Optional[repro.integration.dispatch.DispatchContext]
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.rng = np.random.default_rng(seed)
+        self.dispatch = dispatch
+        # per-scheduler lambdas keep the jit caches per dispatch context
+        # (the context must be active while jit traces, like the engine)
+        self._prefill = jax.jit(
+            lambda p, c, toks: self.model.prefill(p, c, tokens=toks)
+        )
+        self._decode = jax.jit(
+            lambda p, c, toks: self.model.decode_step(p, c, toks)
+        )
+        self.arena = KVArena(self.model, n_slots, max_seq)
+        self.pool = SlotPool(n_slots)
+        self.queue: Deque[ServeRequest] = deque()
+        self.active: Dict[int, ServeRequest] = {}  # slot -> request
+        self._next_tok = np.zeros((n_slots,), np.int32)
+        self._requests: List[ServeRequest] = []
+        self.stats: Dict[str, float] = {
+            "prefill_tokens": 0, "decode_steps": 0, "decode_tokens": 0,
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "admitted": 0, "released": 0, "peak_active": 0,
+        }
+
+    # -- engine-compatible throughput properties ----------------------------
+
+    @property
+    def prefill_tok_s(self) -> float:
+        s = self.stats["prefill_s"]
+        return self.stats["prefill_tokens"] / s if s > 0 else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        s = self.stats["decode_s"]
+        return self.stats["decode_tokens"] / s if s > 0 else 0.0
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(
+        self, prompt: np.ndarray, max_new_tokens: int = 16,
+        temperature: float = 0.0,
+    ) -> ServeRequest:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) > self.max_seq:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds max_seq "
+                f"{self.max_seq}"
+            )
+        r = ServeRequest(
+            len(self._requests), prompt, max_new_tokens, temperature,
+        )
+        r.submit_s = time.perf_counter()
+        self._requests.append(r)
+        self.queue.append(r)
+        metrics().gauge(
+            "serve.queue_depth", len(self.queue), model=self.cfg.name
+        )
+        return r
+
+    def pending(self) -> bool:
+        """True while any request is queued or decoding."""
+        return bool(self.queue or self.active)
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _dctx(self):
+        from ..integration.dispatch import maybe_dispatch
+
+        return maybe_dispatch(self.dispatch)
+
+    def _admit_one(self) -> None:
+        slot = self.pool.alloc()
+        r = self.queue.popleft()
+        r.slot = slot
+        r.admit_s = time.perf_counter()
+        prompt = r.prompt[None, :]  # batch=1, exact length — no padding
+        cache = self.model.init_cache(1, max_seq=self.max_seq)
+        t0 = time.perf_counter()
+        with self._dctx():
+            logits, cache = self._prefill(
+                self.params, cache, jnp.asarray(prompt)
+            )
+        logits = np.asarray(logits.astype(jnp.float32))
+        dt = time.perf_counter() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += len(r.prompt)
+        m = metrics()
+        m.inc("serve.prefill_tokens", len(r.prompt), model=self.cfg.name)
+        m.observe("serve.prefill_s", dt, model=self.cfg.name)
+        m.inc("serve.admit", model=self.cfg.name)
+        if trace_enabled():
+            emit(
+                "serve.prefill",
+                model=self.cfg.name,
+                batch=1,
+                tokens=len(r.prompt),
+                dur_s=round(dt, 6),
+                tok_s=round(len(r.prompt) / dt, 3) if dt > 0 else None,
+            )
+        self.arena.load_slot(slot, cache)
+        tok = self._sample(logits[0, 0], r.temperature)
+        r.generated.append(tok)
+        r.first_token_s = time.perf_counter()
+        m.observe("serve.ttft_s", r.ttft_s, model=self.cfg.name)
+        self._next_tok[slot] = tok
+        self.active[slot] = r
+        self.stats["admitted"] += 1
+        self.stats["peak_active"] = max(
+            self.stats["peak_active"], len(self.active)
+        )
+        if trace_enabled():
+            emit(
+                "serve.admit",
+                model=self.cfg.name,
+                rid=r.rid,
+                slot=slot,
+                prompt_len=len(r.prompt),
+                queue_wait_s=round(r.admit_s - r.submit_s, 6),
+            )
+        if len(r.generated) >= r.max_new_tokens:
+            self._release(slot)  # prefill-only request (max_new_tokens=1)
+
+    def _release(self, slot: int) -> None:
+        r = self.active.pop(slot)
+        r.done = True
+        r.finish_s = time.perf_counter()
+        r.slot = None
+        self.arena.release_slot(slot)
+        self.pool.release(slot)
+        self._next_tok[slot] = 0
+        self.stats["released"] += 1
+        m = metrics()
+        m.inc("serve.evict", model=self.cfg.name)
+        if trace_enabled():
+            emit(
+                "serve.evict",
+                model=self.cfg.name,
+                rid=r.rid,
+                slot=slot,
+                tokens=len(r.generated),
+                ttft_s=round(r.ttft_s, 6),
+                latency_s=round(r.latency_s, 6),
+            )
+
+    def step(self) -> bool:
+        """One scheduler tick: admit into free slots, then one decode
+        step over the arena.  Returns True if any work was done."""
+        admitted = False
+        while self.pool.free and self.queue:
+            self._admit_one()
+            admitted = True
+        m = metrics()
+        m.gauge("serve.queue_depth", len(self.queue), model=self.cfg.name)
+        m.gauge(
+            "serve.slot_utilization",
+            len(self.active) / self.n_slots,
+            model=self.cfg.name,
+        )
+        if not self.active:
+            return admitted
+        t0 = time.perf_counter()
+        with self._dctx():
+            logits, cache = self._decode(
+                self.params, self.arena.cache,
+                jnp.asarray(self._next_tok[:, None]),
+            )
+        self.arena.cache = dict(cache)
+        la = np.asarray(logits[:, 0].astype(jnp.float32))
+        dt = time.perf_counter() - t0
+        new_tokens = 0
+        for slot in list(self.active):
+            r = self.active[slot]
+            # every live lane appends exactly one token; free lanes decode
+            # garbage that is never sampled
+            tok = self._sample(la[slot], r.temperature)
+            r.generated.append(tok)
+            self._next_tok[slot] = tok
+            new_tokens += 1
+            if len(r.generated) >= r.max_new_tokens:
+                self._release(slot)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += new_tokens
+        self.stats["decode_s"] += dt
+        m.inc("serve.decode_tokens", new_tokens, model=self.cfg.name)
+        m.observe("serve.decode_step_s", dt, model=self.cfg.name)
+        m.gauge("serve.decode_tok_s", self.decode_tok_s, model=self.cfg.name)
+        if trace_enabled():
+            emit(
+                "serve.decode",
+                model=self.cfg.name,
+                batch=new_tokens,
+                steps=1,
+                tokens=new_tokens,
+                dur_s=round(dt, 6),
+                tok_s=round(new_tokens / dt, 3) if dt > 0 else None,
+            )
+        return True
+
+    def run(self) -> List[ServeRequest]:
+        """Drain the queue: tick until every request completes."""
+        while self.pending():
+            self.step()
+        return self._requests
