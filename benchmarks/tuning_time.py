@@ -7,14 +7,26 @@ registry at an equal trial count — by default the serial in-process
 ``local`` runner vs ``cached+pool`` (process-pool parallel measurement
 behind a trace-hash cache) — and reports the wall-clock speedup and the
 cache-hit rate.  ``--smoke`` runs a single tiny workload for CI.
+
+It also runs the learned-search transfer comparison (README "Learned
+search"): a cold tune persists its cost model + sampling distributions,
+then a *warm* tune on a fresh database — learned state only, no record
+leakage — must reach the cold run's best latency in at most 60% of the
+cold run's measured trials.  Results land in ``BENCH_tuning_time.json``
+(``--json-out``), which CI uploads as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
-from typing import Dict, List, Sequence
+import tempfile
+from typing import Dict, List, Optional, Sequence
 
+from repro.search.cost_model import GBDTCostModel
+from repro.search.database import Database, sidecar_path
+from repro.search.distributions import DecisionDistributions
 from repro.search.evolutionary import SearchConfig
 from repro.search.measure import create_runner
 from repro.search.tune import tune_workload
@@ -30,6 +42,13 @@ SMOKE_WORKLOADS = [("gmm", dict(n=64, m=64, k=64), False)]
 DEFAULT_RUNNERS = ("local", "cached+pool")
 
 
+def _bench_config(trials: int) -> SearchConfig:
+    return SearchConfig(
+        max_trials=trials, init_random=max(trials // 4, 4),
+        population=max(trials // 2, 8), measure_per_round=max(trials // 4, 4),
+    )
+
+
 def run(
     csv: bool = True,
     smoke: bool = False,
@@ -38,10 +57,7 @@ def run(
 ) -> List[Dict]:
     trials = int(os.environ.get("REPRO_BENCH_TRIALS", "6" if smoke else "16"))
     workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
-    cfg = SearchConfig(
-        max_trials=trials, init_random=max(trials // 4, 4),
-        population=max(trials // 2, 8), measure_per_round=max(trials // 4, 4),
-    )
+    cfg = _bench_config(trials)
     out = []
     # one runner instance per spec, shared across workloads — the same
     # lifetime TaskScheduler gives it, so pool startup amortizes and the
@@ -102,6 +118,73 @@ def _run_workloads(workloads, runner_specs, runners, cfg, prev_stats, out, csv):
             )
 
 
+def warm_start_comparison(
+    smoke: bool = False, backend: str = None, csv: bool = True
+) -> Optional[Dict]:
+    """Cold-vs-warm tuning of one workload through persisted learned state.
+
+    The cold run tunes with a fresh file-backed database, persisting its
+    cost model and sampling distributions as sidecars.  The warm run gets a
+    *fresh, empty* database plus only the loaded sidecar objects — so any
+    speedup comes from transferred learned state, never from replaying
+    database records.  The claim checked: the warm run reaches the cold
+    run's best latency (within ``REPRO_BENCH_TOLERANCE``, default 1.10) in
+    at most 60% of the cold run's measured trials.
+    """
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "6" if smoke else "16"))
+    tol = float(os.environ.get("REPRO_BENCH_TOLERANCE", "1.10"))
+    name, kwargs, mxu = (SMOKE_WORKLOADS if smoke else WORKLOADS)[0]
+    cfg = _bench_config(trials)
+    d = tempfile.mkdtemp(prefix="repro_warm_bench_")
+    cold_db = Database(os.path.join(d, "cold_db.json"))
+    cold = tune_workload(
+        name, kwargs, use_mxu=mxu, config=cfg, database=cold_db,
+        backend=backend,
+    )
+    model_path = sidecar_path(cold_db.path, "model")
+    dists_path = sidecar_path(cold_db.path, "dists")
+    if not (os.path.exists(model_path) and os.path.exists(dists_path)):
+        if csv:
+            print(f"tuning_time/{name}/warm_start,skipped,no_sidecars")
+        return None
+    warm_cfg = _bench_config(trials)
+    warm_cfg.seed = cfg.seed + 1  # transfer, not a replay of the cold rng
+    warm = tune_workload(
+        name, kwargs, use_mxu=mxu, config=warm_cfg,
+        database=Database(os.path.join(d, "warm_db.json")),
+        cost_model=GBDTCostModel.load(model_path),
+        distributions=DecisionDistributions.load(dists_path),
+        backend=backend,
+    )
+    target = cold.best_latency_s * tol
+    warm_trials = warm.trials_to(target)
+    row = {
+        "workload": name,
+        "trials_budget": trials,
+        "tolerance": tol,
+        "cold_best_us": cold.best_latency_s * 1e6,
+        "warm_best_us": warm.best_latency_s * 1e6,
+        "target_us": target * 1e6,
+        "cold_trials": cold.trials,
+        "cold_trials_to_best": cold.trials_to_best,
+        "warm_trials_to_target": warm_trials,
+        "warm_frac_of_cold_trials": (
+            warm_trials / cold.trials if warm_trials else None
+        ),
+        "meets_60pct": warm_trials is not None
+        and warm_trials <= 0.6 * cold.trials,
+    }
+    if csv:
+        frac = row["warm_frac_of_cold_trials"]
+        print(
+            f"tuning_time/{name}/warm_start,"
+            f"{frac if frac is not None else 'inf'},"
+            f"warm_trials={warm_trials};cold_trials={cold.trials};"
+            f"meets_60pct={row['meets_60pct']}"
+        )
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -117,12 +200,30 @@ def main(argv=None):
         help="lowering-backend spec (jnp, pallas, ...); default "
              "REPRO_BACKEND env or jnp",
     )
+    ap.add_argument(
+        "--json-out", default="BENCH_tuning_time.json",
+        help="write rows + warm-start comparison to this JSON file "
+             "('' disables)",
+    )
+    ap.add_argument(
+        "--skip-warm", action="store_true",
+        help="skip the cold-vs-warm learned-search comparison",
+    )
     args = ap.parse_args(argv)
-    run(
+    rows = run(
         smoke=args.smoke,
         runner_specs=[s for s in args.runners.split(",") if s],
         backend=args.backend,
     )
+    warm = (
+        None
+        if args.skip_warm
+        else warm_start_comparison(smoke=args.smoke, backend=args.backend)
+    )
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"rows": rows, "warm_start": warm}, f, indent=2)
+        print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

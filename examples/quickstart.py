@@ -1,8 +1,13 @@
 """Quickstart: construct a probabilistic search space for a matmul and
 tune it with the learning-driven search (paper Figures 3 + 7 end-to-end).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full demo
+    PYTHONPATH=src python examples/quickstart.py --smoke    # tiny CI run
 """
+
+import argparse
+import os
+import tempfile
 
 from repro.core.workloads import gmm
 from repro.core.schedule import Schedule
@@ -31,20 +36,32 @@ def manual_schedule_demo():
     print(sch.trace.as_python())
 
 
-def tuned_search_demo():
-    db = Database("/tmp/quickstart_db.json")
+def tuned_search_demo(smoke=False):
+    if smoke:
+        db = Database(os.path.join(tempfile.mkdtemp(), "quickstart_db.json"))
+        shape = dict(n=32, m=32, k=32)
+        cfg = SearchConfig(max_trials=8, init_random=4, population=6,
+                           measure_per_round=4)
+    else:
+        db = Database("/tmp/quickstart_db.json")
+        shape = dict(n=128, m=128, k=128)
+        cfg = SearchConfig(max_trials=32, init_random=8, population=12,
+                           measure_per_round=8)
     res = tune_workload(
-        "gmm", dict(n=128, m=128, k=128), use_mxu=True,
-        config=SearchConfig(max_trials=32, init_random=8, population=12,
-                            measure_per_round=8),
-        database=db, verbose=True,
+        "gmm", shape, use_mxu=True, config=cfg, database=db,
+        verbose=not smoke,
     )
     print(f"\nbest latency      : {res.best_latency_s*1e6:9.1f} us")
     print(f"naive-jnp baseline: {res.baseline_latency_s*1e6:9.1f} us")
     print(f"speedup           : {res.speedup_vs_baseline:9.2f}x")
     print(f"trials            : {res.trials}, {res.tuning_time_s:.1f}s")
+    print(f"warm-started      : {res.warm_started}")
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape + trial budget (CI)")
+    args = ap.parse_args()
     manual_schedule_demo()
-    tuned_search_demo()
+    tuned_search_demo(smoke=args.smoke)

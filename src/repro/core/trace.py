@@ -116,11 +116,20 @@ class Trace:
 
     def with_decision(self, idx: int, decision: Any) -> "Trace":
         """New trace with one sampling decision replaced (mutation)."""
+        return self.with_decisions({idx: decision})
+
+    def with_decisions(self, decisions: Dict[int, Any]) -> "Trace":
+        """New trace with several sampling decisions replaced at once —
+        the entry point for learned sampling distributions, which override
+        every matched decision site of a freshly generated trace in one
+        shot (see :mod:`repro.search.distributions`)."""
         insts = []
         for i, it in enumerate(self.insts):
-            if i == idx:
+            if i in decisions:
                 insts.append(
-                    Instruction(it.name, it.inputs, it.attrs, it.outputs, decision)
+                    Instruction(
+                        it.name, it.inputs, it.attrs, it.outputs, decisions[i]
+                    )
                 )
             else:
                 insts.append(it)

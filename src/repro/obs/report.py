@@ -113,6 +113,39 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         if vals:
             entry["mean_spearman"] = round(sum(vals) / len(vals), 4)
 
+    # -- learned search: warm starts, rollout pruning, learned sampling ------
+    learned: Optional[Dict[str, Any]] = None
+    warm_evs = by_type.get("costmodel.warm_start", [])
+    prune_evs = by_type.get("costmodel.prune", [])
+    sample_evs = by_type.get("search.sample", [])
+    dist_evs = by_type.get("search.dists", [])
+    n_learned = sum(int(e.get("learned", 0)) for e in sample_evs)
+    n_sampled = sum(int(e.get("valid", 0)) for e in sample_evs)
+    if warm_evs or prune_evs or dist_evs or n_learned:
+        scored = sum(int(e.get("scored", 0)) for e in prune_evs)
+        kept = sum(int(e.get("kept", 0)) for e in prune_evs)
+        learned = {
+            "warm_starts": len(warm_evs),
+            "warm_model_samples": max(
+                (int(e.get("model_samples", 0)) for e in warm_evs), default=0
+            ),
+            "warm_dist_sites": max(
+                (int(e.get("dist_sites", 0)) for e in warm_evs), default=0
+            ),
+            "prune_rounds": len(prune_evs),
+            "candidates_scored": scored,
+            "candidates_kept": kept,
+            "pruned_frac": round(1 - kept / scored, 4) if scored else None,
+            "samples": n_sampled,
+            "learned_samples": n_learned,
+            "learned_frac": (
+                round(n_learned / n_sampled, 4) if n_sampled else None
+            ),
+            "dist_sites": max(
+                (int(e.get("sites", 0)) for e in dist_evs), default=0
+            ),
+        }
+
     # -- measurement health --------------------------------------------------
     ok_runs = [e for e in runs if e.get("ok")]
     measure = {
@@ -232,6 +265,7 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         "rounds": len(by_type.get("tune.round", [])),
         "tasks": tasks,
         "cost_model": cost_model,
+        "learned": learned,
         "measure": measure,
         "dispatch": dispatch,
         "extract_skips": extract_skips,
@@ -281,6 +315,22 @@ def render_text(report: Dict[str, Any]) -> str:
                 add(f"    round {r['round']}: n={r['n']} "
                     f"spearman={f'{rho:.3f}' if rho is not None else '-'}"
                     f"{'' if r.get('trained') else ' (untrained)'}")
+        add("")
+    if report.get("learned"):
+        ln = report["learned"]
+        add("-- learned search --")
+        if ln["warm_starts"]:
+            add(f"  warm starts: {ln['warm_starts']} "
+                f"(model_samples={ln['warm_model_samples']} "
+                f"dist_sites={ln['warm_dist_sites']})")
+        lf = ln["learned_frac"]
+        add(f"  sampling: {ln['learned_samples']}/{ln['samples']} learned "
+            f"({f'{100 * lf:.0f}%' if lf is not None else '-'}), "
+            f"{ln['dist_sites']} distribution sites")
+        pf = ln["pruned_frac"]
+        add(f"  rollout pruning: {ln['prune_rounds']} rounds, "
+            f"scored={ln['candidates_scored']} kept={ln['candidates_kept']}"
+            f"{f' (pruned {100 * pf:.0f}%)' if pf is not None else ''}")
         add("")
     m = report["measure"]
     add("-- measurement health --")

@@ -30,12 +30,15 @@ from ..core.validator import validate_trace
 from ..obs import ConsoleSink, emit, metrics, span, spearman, trace_enabled
 from .cost_model import GBDTCostModel
 from .database import Database, TuningRecord
+from .distributions import QUALITY_GAMMA, DecisionDistributions
 from .features import extract_features
 from .measure import MeasureInput, as_runner, structural_hash
 
 
 @dataclass
 class SearchConfig:
+    """Knobs of the learning-driven evolutionary search (paper §4)."""
+
     max_trials: int = 64            # total hardware measurements
     population: int = 24            # candidates per round
     init_random: int = 16           # initial random samples from the space
@@ -45,10 +48,21 @@ class SearchConfig:
     temp_init: float = 0.3          # annealing temperature (score units)
     temp_decay: float = 0.7
     seed: int = 0
+    # learned sampling: fraction of fresh samples whose decisions are drawn
+    # from the fitted per-site distributions instead of the uniform prior
+    learned_sampling: bool = True
+    learned_frac: float = 0.5
+    # cost-model-only rollout pruning: once the model is trained, each round
+    # samples rollout_factor x the population, scores all of them with the
+    # model alone, and only the top `population` survive to evolution and
+    # the measured slice ("Toward Compiler World Models")
+    rollout_factor: int = 4
 
 
 @dataclass
 class Candidate:
+    """One schedule candidate: trace + features + model-predicted score."""
+
     trace: Trace
     schedule: Schedule
     features: np.ndarray
@@ -56,6 +70,18 @@ class Candidate:
 
 
 class EvolutionarySearch:
+    """Learning-driven evolutionary search over one task's trace space.
+
+    Each round: sample a candidate pool (a learned slice of it through the
+    fitted per-decision distributions), prune it with cost-model-only
+    rollouts, evolve the survivors with annealed MH, measure the ε-greedy
+    top slice, then retrain the cost model and refit the distributions on
+    the new measurements.  ``cost_model`` and ``distributions`` may be
+    shared across sibling searches (cross-task transfer) and persisted
+    across runs (warm start) — see :func:`repro.search.tune.tune_workload`
+    and :class:`repro.search.task_scheduler.TaskScheduler`.
+    """
+
     def __init__(
         self,
         func: PrimFunc,
@@ -65,6 +91,7 @@ class EvolutionarySearch:
         workload_key: str = "",
         config: Optional[SearchConfig] = None,
         cost_model: Optional[GBDTCostModel] = None,
+        distributions: Optional[DecisionDistributions] = None,
         verbose: bool = False,
     ):
         self.func = func
@@ -73,7 +100,19 @@ class EvolutionarySearch:
         self.db = database
         self.key = workload_key or func.name
         self.cfg = config or SearchConfig()
-        self.model = cost_model or GBDTCostModel(seed=self.cfg.seed)
+        self.model = (
+            cost_model if cost_model is not None else GBDTCostModel(seed=self.cfg.seed)
+        )
+        owns_dists = distributions is None
+        self.dists = (
+            distributions if distributions is not None else DecisionDistributions()
+        )
+        # when this search owns its distributions, warm-start them from the
+        # database's records for this task (a shared registry is seeded by
+        # its owner — TaskScheduler / tune_workload — across all keys)
+        if owns_dists and self.db is not None and self.db.records.get(self.key):
+            self.dists.observe_database(self.db, keys=[self.key])
+            self.dists.fit()
         self.rng = np.random.default_rng(self.cfg.seed)
         self.verbose = verbose
         # verbose=True is a console-sink alias: the same events the tracer
@@ -89,6 +128,11 @@ class EvolutionarySearch:
         # per-round predicted-vs-measured record: the cost model's rank
         # correlation is a first-class recorded metric, not a debug print
         self.round_correlations: List[Dict] = []
+        # per-round rollout-pruning record: (pool scored, kept)
+        self.prune_events: List[Dict] = []
+        # how many candidates came from the learned distributions vs prior
+        self.learned_samples = 0
+        self.prior_samples = 0
         self._X: List[np.ndarray] = []
         self._lat: List[float] = []
 
@@ -105,6 +149,7 @@ class EvolutionarySearch:
 
     @property
     def total_failures(self) -> int:
+        """Total failed measurements across all rounds."""
         return sum(self.failure_counts)
 
     def _provenance(self, res) -> Dict:
@@ -134,27 +179,93 @@ class EvolutionarySearch:
         feats = extract_features(res.schedule)
         return Candidate(res.schedule.trace, res.schedule, feats)
 
+    def _learned_variant(self, trace: Trace) -> Optional[Candidate]:
+        """Re-draw a fresh trace's decisions from the learned distributions.
+
+        Returns ``None`` when no site produced an override or the overridden
+        trace falls outside the support (the validator rejects it).
+        """
+        decs = self.dists.decisions_for(trace, self.rng)
+        if not decs:
+            return None
+        return self._validated(trace.with_decisions(decs))
+
     def _sample_initial(self, n: int) -> List[Candidate]:
         t0 = time.perf_counter()
         out: List[Candidate] = []
         tries = 0
+        learned = 0
+        use_learned = (
+            self.cfg.learned_sampling
+            and self.cfg.learned_frac > 0
+            and self.dists.fitted
+        )
         while len(out) < n and tries < n * 10:
             tries += 1
             seed = int(self.rng.integers(0, 2**31))
             sch = self.space.generate(self.func, seed=seed)
-            cand = self._validated(sch.trace)
+            cand = None
+            if use_learned and self.rng.random() < self.cfg.learned_frac:
+                cand = self._learned_variant(sch.trace)
+                if cand is not None:
+                    learned += 1
+            if cand is None:
+                cand = self._validated(sch.trace)
             if cand is not None:
                 out.append(cand)
+        self.learned_samples += learned
+        self.prior_samples += len(out) - learned
         if trace_enabled():
             emit(
                 "search.sample",
                 task=self.key,
                 requested=n,
                 valid=len(out),
+                learned=learned,
                 tries=tries,
                 dur_s=time.perf_counter() - t0,
             )
         return out
+
+    def _propose_pool(
+        self, survivors: Optional[List[Candidate]] = None
+    ) -> List[Candidate]:
+        """One round's candidate pool: sample, rollout-prune, evolve.
+
+        With a trained cost model and ``rollout_factor > 1``, the fresh
+        sample is ``rollout_factor``x oversized; all candidates are scored
+        model-only and just the top ``population`` survive to MH evolution
+        (and from there, at most ``measure_per_round`` to real measurement).
+        """
+        survivors = survivors or []
+        n_fresh = max(self.cfg.population - len(survivors), 0)
+        factor = (
+            self.cfg.rollout_factor
+            if self.model.trained and self.cfg.rollout_factor > 1
+            else 1
+        )
+        fresh = self._sample_initial(n_fresh * factor)
+        pool = survivors + fresh
+        self._score(pool)
+        if factor > 1 and len(pool) > self.cfg.population:
+            pool.sort(key=lambda c: -c.score)
+            kept = pool[: self.cfg.population]
+            rec = {
+                "round": len(self.failure_counts),
+                "scored": len(pool),
+                "kept": len(kept),
+            }
+            self.prune_events.append(rec)
+            metrics().inc("costmodel.pruned", len(pool) - len(kept), task=self.key)
+            if trace_enabled():
+                emit(
+                    "costmodel.prune",
+                    task=self.key,
+                    cutoff_score=kept[-1].score,
+                    **rec,
+                )
+            pool = kept
+        return self._evolve(pool)
 
     def _score(self, cands: List[Candidate]) -> None:
         if not cands:
@@ -311,17 +422,34 @@ class EvolutionarySearch:
             metrics().gauge(
                 "search.best_latency_s", self.best_latency, task=self.key
             )
-        # retrain the model on normalized throughput scores
+        # retrain the model on normalized throughput scores: this task's
+        # sample pool is replaced wholesale; a model shared across tasks
+        # (TaskScheduler) refits on the union of every task's pool
         if self._lat:
             best = min(self._lat)
             y = np.array([best / l for l in self._lat])
-            self.model._X = None  # full refit on all data
-            self.model._y = None
-            self.model.update(np.stack(self._X), y)
+            self.model.set_task_data(self.key, np.stack(self._X), y)
+        # refit the learned sampling distributions on this round's measured
+        # candidates, weighted by normalized throughput (sharpened so
+        # near-best schedules dominate the learned prior)
+        if np.isfinite(self.best_latency):
+            for c, res in zip(cands, results):
+                if res.ok:
+                    w = (self.best_latency / res.latency_s) ** QUALITY_GAMMA
+                    self.dists.observe_trace(c.trace, w)
+            self.dists.fit()
+            if trace_enabled():
+                emit(
+                    "search.dists",
+                    task=self.key,
+                    sites=len(self.dists),
+                    observations=self.dists.observations,
+                )
 
     # -- main loop -------------------------------------------------------------
 
     def tune(self) -> "EvolutionarySearch":
+        """Run the full search loop until ``max_trials`` measurements."""
         with span("tune.round", task=self.key, round=0) as sp:
             init = self._sample_initial(self.cfg.init_random)
             if not init:
@@ -344,13 +472,12 @@ class EvolutionarySearch:
         while len(self.measured) < self.cfg.max_trials:
             r += 1
             with span("tune.round", task=self.key, round=r) as sp:
-                # refill population with fresh randoms + survivors
+                # refill population with fresh samples (learned + prior,
+                # rollout-pruned) on top of the best survivors
                 survivors = sorted(pool, key=lambda c: -c.score)[
                     : self.cfg.population // 2
                 ]
-                fresh = self._sample_initial(self.cfg.population - len(survivors))
-                pool = survivors + fresh
-                pool = self._evolve(pool)
+                pool = self._propose_pool(survivors)
                 to_measure = self._select_to_measure(
                     pool,
                     min(

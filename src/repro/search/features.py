@@ -25,6 +25,12 @@ def _log2(x: float) -> float:
 
 
 def block_features(sch: Schedule, bn: BlockNode, path: List[LoopNode]) -> np.ndarray:
+    """Feature vector of one block in its loop nest (``N_BLOCK_FEATURES``).
+
+    Shape-generic by construction — extents enter as log2 magnitudes, never
+    raw dimensions — so vectors pool meaningfully across tasks in a shared
+    cost model (cross-task transfer).
+    """
     from ..backends.jnp_backend import _tile_suffix
 
     blk = bn.block
@@ -124,6 +130,7 @@ def extract_features(sch: Schedule) -> np.ndarray:
     feats: List[np.ndarray] = []
 
     def walk(nodes, path):
+        """Collect block features depth-first, tracking the loop path."""
         for n in nodes:
             if isinstance(n, LoopNode):
                 walk(n.body, path + [n])

@@ -30,11 +30,14 @@ from ..core.tir import PrimFunc, random_inputs
 
 @dataclass
 class MeasureResult:
+    """Latency of one measured schedule (legacy serial protocol)."""
+
     latency_s: float  # median wall time; inf on failure
     error: str = ""
 
     @property
     def ok(self) -> bool:
+        """Whether the measurement succeeded (finite latency)."""
         return np.isfinite(self.latency_s)
 
 
@@ -64,6 +67,7 @@ class LocalRunner:
         return self._inputs_cache[key]
 
     def measure(self, sch: Schedule) -> MeasureResult:
+        """Build, jit, and time one schedule; ``inf`` latency on failure."""
         func = sch.func
         ins = self._inputs(func)
         try:
@@ -89,6 +93,7 @@ class LocalRunner:
             return MeasureResult(float("inf"), f"{type(e).__name__}: {e}")
 
     def measure_callable(self, fn: Callable, ins) -> float:
+        """Median wall time of an already-compiled callable on ``ins``."""
         jax.block_until_ready(fn(ins))
         times = []
         for _ in range(max(self.repeats, 2)):

@@ -17,14 +17,18 @@ import numpy as np
 
 from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
-from ..obs import ConsoleSink, metrics, span
+from ..obs import ConsoleSink, emit, metrics, span, trace_enabled
+from .cost_model import GBDTCostModel
 from .database import Database
+from .distributions import DecisionDistributions
 from .evolutionary import EvolutionarySearch, SearchConfig
 from .measure import as_runner
 
 
 @dataclass
 class TuneTask:
+    """One extracted tensor-program task: workload key, program, weight."""
+
     key: str
     func: PrimFunc
     weight: float = 1.0  # e.g. occurrence count in the model
@@ -43,6 +47,14 @@ class TaskScheduler:
     task that fails to improve for ``patience`` consecutive rounds is
     considered plateaued and stops receiving trials; tuning ends early
     once every task has plateaued.
+
+    All tasks share **one** cost model and **one** learned-distribution
+    registry: the model pools every task's samples over shape-generic
+    features, and the distributions pool decisions by shape-generic site
+    keys — the cross-task transfer of "Learning to Optimize Tensor
+    Programs".  With a file-backed database (``warm_start=True``), both are
+    loaded from the database's sidecar files before tuning and saved back
+    after, so knowledge also transfers across runs.
     """
 
     def __init__(
@@ -58,7 +70,12 @@ class TaskScheduler:
         rel_improvement: float = 1e-3,
         seed: Optional[int] = None,
         seed_defaults: bool = True,
+        cost_model: Optional[GBDTCostModel] = None,
+        distributions: Optional[DecisionDistributions] = None,
+        warm_start: bool = True,
     ):
+        from .tune import load_search_state
+
         self.tasks = list(tasks)
         self.db = database
         # one shared runner across tasks: a caching runner then dedups
@@ -74,6 +91,32 @@ class TaskScheduler:
         self.rel_improvement = rel_improvement
         self.seed_defaults = seed_defaults
         self.rng = np.random.default_rng(seed if seed is not None else cfg.seed)
+        # shared learned state: one model + one distribution registry for
+        # every task (cross-task transfer), warm-started from the
+        # database's sidecar files when present (cross-run transfer)
+        self.warm_start = warm_start
+        self.warm_started = False
+        model, dists = cost_model, distributions
+        if warm_start and (model is None or dists is None):
+            loaded_model, loaded_dists = load_search_state(database)
+            if model is None and loaded_model is not None:
+                model, self.warm_started = loaded_model, True
+            if dists is None and loaded_dists is not None:
+                dists, self.warm_started = loaded_dists, True
+        self.model = model if model is not None else GBDTCostModel(seed=cfg.seed)
+        self.dists = dists if dists is not None else DecisionDistributions()
+        if not self.warm_started and self.db is not None and self.db.records:
+            # no sidecars: learn the prior from existing database records
+            self.dists.observe_database(self.db)
+            self.dists.fit()
+        if self.warm_started and trace_enabled():
+            emit(
+                "costmodel.warm_start",
+                tasks=[t.key for t in self.tasks],
+                model_samples=self.model.n_samples,
+                model_trained=self.model.trained,
+                dist_sites=len(self.dists),
+            )
         self.searches: List[EvolutionarySearch] = []
         for t in self.tasks:
             space = SpaceGenerator(default_modules(use_mxu=t.use_mxu))
@@ -85,6 +128,8 @@ class TaskScheduler:
                     database=self.db,
                     workload_key=t.key,
                     config=SearchConfig(**{**cfg.__dict__}),
+                    cost_model=self.model,
+                    distributions=self.dists,
                 )
             )
         n = len(self.tasks)
@@ -145,8 +190,9 @@ class TaskScheduler:
                 s._measure(init[: s.cfg.measure_per_round])
             self._initialized[i] = True
         else:
-            pool = s._sample_initial(s.cfg.population)
-            pool = s._evolve(pool)
+            # sample (learned + prior), rollout-prune with the shared cost
+            # model, evolve, then measure the e-greedy slice
+            pool = s._propose_pool()
             picks = s._select_to_measure(pool, s.cfg.measure_per_round)
             if picks:
                 s._measure(picks)
@@ -162,6 +208,11 @@ class TaskScheduler:
         self._best_seen[i] = min(prev, now)
 
     def tune(self, total_rounds: int = 16) -> Dict[str, float]:
+        """Allocate up to ``total_rounds`` search rounds across tasks.
+
+        Returns ``{workload key: best latency}``; the shared cost model and
+        distributions are persisted beside the database on the way out.
+        """
         with span(
             "tune.session",
             tasks=[t.key for t in self.tasks],
@@ -203,4 +254,10 @@ class TaskScheduler:
                         }
                     )
             sess.note(rounds_run=self.rounds_run)
+        if self.warm_start:
+            # persist the shared model + distributions beside the database
+            # so the next run (or another pipeline on the same db) warm-starts
+            from .tune import save_search_state
+
+            save_search_state(self.db, self.model, self.dists)
         return {t.key: s.best_latency for t, s in zip(self.tasks, self.searches)}

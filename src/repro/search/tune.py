@@ -13,12 +13,14 @@ from typing import Dict, Optional, Sequence
 
 from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import Module, SpaceGenerator, default_modules
-from ..obs import span
+from ..obs import emit, trace_enabled, span
 from ..core.tir import PrimFunc
 from ..core.trace import Trace
 from ..core.validator import validate_trace
 from ..core.workloads import get_workload
-from .database import Database, workload_key
+from .cost_model import GBDTCostModel
+from .database import Database, sidecar_path, workload_key
+from .distributions import DecisionDistributions
 from .evolutionary import EvolutionarySearch, SearchConfig
 from .measure import MeasureInput, as_runner
 from .runner import LocalRunner
@@ -26,6 +28,8 @@ from .runner import LocalRunner
 
 @dataclass
 class TuneResult:
+    """Outcome of one :func:`tune_workload` call (latency in seconds)."""
+
     workload_key: str
     best_latency_s: float
     baseline_latency_s: float   # whole-domain jnp (XLA-native) oracle
@@ -40,15 +44,78 @@ class TuneResult:
     cache_hits: int = 0
     cache_misses: int = 0
     runner_stats: Optional[Dict] = None
+    warm_started: bool = False  # persisted cost model / dists were loaded
 
     @property
     def speedup_vs_baseline(self) -> float:
+        """Tuned best vs the whole-domain jnp (XLA-native) oracle."""
         return self.baseline_latency_s / self.best_latency_s
 
     @property
     def speedup_vs_default(self) -> float:
         """The search's contribution: tuned vs untuned schedule."""
         return self.default_latency_s / self.best_latency_s
+
+    @property
+    def trials_to_best(self) -> int:
+        """First trial count at which the final best latency was reached —
+        the x-axis of the warm-start claim in ``benchmarks/tuning_time.py``.
+        """
+        for trial, best in self.history:
+            if best <= self.best_latency_s:
+                return trial
+        return self.trials
+
+    def trials_to(self, target_latency_s: float) -> Optional[int]:
+        """First trial count at which ``best <= target`` was reached, or
+        ``None`` if the search never got there."""
+        for trial, best in self.history:
+            if best <= target_latency_s:
+                return trial
+        return None
+
+
+def load_search_state(
+    database: Optional[Database],
+) -> "tuple[Optional[GBDTCostModel], Optional[DecisionDistributions]]":
+    """Load the persisted cost model + distributions beside a database.
+
+    Returns ``(model, dists)``, each ``None`` when its sidecar file
+    (``<db>.model.json`` / ``<db>.dists.json``) is absent or unreadable.
+    """
+    model = dists = None
+    if database is None or not database.path:
+        return None, None
+    mp = sidecar_path(database.path, "model")
+    dp = sidecar_path(database.path, "dists")
+    import os
+
+    if os.path.exists(mp):
+        try:
+            model = GBDTCostModel.load(mp)
+        except (ValueError, OSError, KeyError):
+            model = None
+    if os.path.exists(dp):
+        try:
+            dists = DecisionDistributions.load(dp)
+        except (ValueError, OSError, KeyError):
+            dists = None
+    return model, dists
+
+
+def save_search_state(
+    database: Optional[Database],
+    model: Optional[GBDTCostModel],
+    dists: Optional[DecisionDistributions],
+) -> None:
+    """Persist the cost model + distributions beside a database (no-op for
+    in-memory databases)."""
+    if database is None or not database.path:
+        return
+    if model is not None and model.trained:
+        model.save(sidecar_path(database.path, "model"))
+    if dists is not None and dists.fitted:
+        dists.save(sidecar_path(database.path, "dists"))
 
 
 def tune_workload(
@@ -62,8 +129,24 @@ def tune_workload(
                   # a measure.Runner, or a legacy LocalRunner
     backend: Optional[str] = None,  # lowering-backend spec ("jnp", "pallas");
                                     # None -> REPRO_BACKEND env or "jnp"
+    cost_model: Optional[GBDTCostModel] = None,
+    distributions: Optional[DecisionDistributions] = None,
+    warm_start: bool = True,
     verbose: bool = False,
 ) -> TuneResult:
+    """Tune one workload end to end (paper Figure 7) and return the result.
+
+    With a file-backed ``database`` and ``warm_start=True`` (the default),
+    the GBDT cost model and the learned sampling distributions are loaded
+    from the database's sidecar files (``<db>.model.json`` /
+    ``<db>.dists.json``) before the search and saved back after it — so a
+    later run (or a different task sharing the database) starts with a
+    trained model and a learned prior instead of uniform sampling.
+    Explicit ``cost_model`` / ``distributions`` arguments override the
+    sidecars (pass the objects returned by
+    :meth:`GBDTCostModel.load` / :meth:`DecisionDistributions.load` to
+    transfer learned state *across* databases).
+    """
     import time
 
     shape_kwargs = shape_kwargs or {}
@@ -71,6 +154,31 @@ def tune_workload(
     key = workload_key(name, **shape_kwargs)
     space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
     runner = as_runner(runner, backend=backend)
+
+    # -- warm start: persisted model + distributions beside the database --
+    warm_started = False
+    model, dists = cost_model, distributions
+    if warm_start and (model is None or dists is None):
+        loaded_model, loaded_dists = load_search_state(database)
+        if model is None and loaded_model is not None:
+            model, warm_started = loaded_model, True
+        if dists is None and loaded_dists is not None:
+            dists, warm_started = loaded_dists, True
+    if warm_started and trace_enabled():
+        emit(
+            "costmodel.warm_start",
+            task=key,
+            model_samples=getattr(model, "n_samples", 0),
+            model_trained=getattr(model, "trained", False),
+            dist_sites=len(dists) if dists is not None else 0,
+        )
+    if dists is None and database is not None and database.records:
+        # no persisted distributions: learn the prior from the database's
+        # records (every key — tile sites are keyed shape-generically)
+        dists = DecisionDistributions()
+        dists.observe_database(database)
+        dists.fit()
+
     t0 = time.perf_counter()
     with span(
         "tune.session",
@@ -84,9 +192,13 @@ def tune_workload(
             database=database,
             workload_key=key,
             config=config,
+            cost_model=model,
+            distributions=dists,
             verbose=verbose,
         ).tune()
     dt = time.perf_counter() - t0
+    if warm_start:
+        save_search_state(database, search.model, search.dists)
     if search.best_trace is not None:
         # re-verify the winner through the same runner: with a caching
         # runner this is a guaranteed dedup hit, not a re-measurement.
@@ -119,6 +231,7 @@ def tune_workload(
         cache_hits=int(stats.get("cache_hits", 0)),
         cache_misses=int(stats.get("cache_misses", 0)),
         runner_stats=stats,
+        warm_started=warm_started,
     )
 
 

@@ -1,0 +1,316 @@
+"""Learned search: cost-model persistence, learned sampling distributions,
+rollout pruning, database schema tolerance, and cross-run warm starts."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.modules import SpaceGenerator, default_modules
+from repro.core.validator import validate_trace
+from repro.search.cost_model import (
+    COST_MODEL_FORMAT_VERSION,
+    GBDTCostModel,
+    GBDTModel,
+)
+from repro.search.database import Database, sidecar_path, workload_key
+from repro.search.distributions import (
+    DecisionDistributions,
+    LearnedCategorical,
+    decision_site_key,
+)
+from repro.search.evolutionary import EvolutionarySearch, SearchConfig
+from repro.search.task_scheduler import TaskScheduler, TuneTask
+from repro.search.tune import (
+    load_search_state,
+    save_search_state,
+    tune_workload,
+)
+
+
+def _rand_pool(n, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, 8)).astype(np.float32)
+    y = (X[:, 0] * 0.7 + X[:, 3] * 0.3).astype(np.float64)
+    return X, y
+
+
+def _sampled_traces(count=6, name="gmm", **kwargs):
+    """Valid traces drawn from the default space for one workload."""
+    kwargs = kwargs or dict(n=16, m=16, k=16)
+    func = W.get_workload(name, **kwargs)
+    gen = SpaceGenerator(default_modules())
+    traces = []
+    for s in range(count * 4):
+        sch = gen.generate(func, seed=s)
+        if validate_trace(func, sch.trace).ok:
+            traces.append(sch.trace)
+        if len(traces) == count:
+            break
+    assert traces, "space produced no valid traces"
+    return func, traces
+
+
+class TestCostModelPersistence:
+    def test_save_load_round_trip_is_bit_identical(self, tmp_path):
+        X, y = _rand_pool(40)
+        m = GBDTCostModel(n_trees=12)
+        m.set_task_data("taskA", X, y)
+        assert m.trained and m.n_samples == 40
+        p = str(tmp_path / "model.json")
+        m.save(p)
+        m2 = GBDTCostModel.load(p)
+        Xq = _rand_pool(16, seed=5)[0]
+        # loaded model predicts from its persisted trees without refitting
+        np.testing.assert_array_equal(m.predict(Xq), m2.predict(Xq))
+        assert m2.tasks() == ["taskA"] and m2.n_samples == 40
+
+    def test_pools_survive_round_trip_and_keep_accumulating(self, tmp_path):
+        m = GBDTCostModel(n_trees=8)
+        m.set_task_data("a", *_rand_pool(20, seed=1))
+        m.set_task_data("b", *_rand_pool(12, seed=2))
+        p = str(tmp_path / "model.json")
+        m.save(p)
+        m2 = GBDTCostModel.load(p)
+        assert m2.tasks() == ["a", "b"] and m2.n_samples == 32
+        m2.set_task_data("c", *_rand_pool(10, seed=3))
+        assert m2.n_samples == 42  # pools accumulate, not reset
+
+    def test_newer_format_version_raises(self):
+        X, y = _rand_pool(20)
+        m = GBDTCostModel(n_trees=4)
+        m.set_task_data("t", X, y)
+        blob = json.loads(m.to_json())
+        blob["version"] = COST_MODEL_FORMAT_VERSION + 1
+        with pytest.raises(ValueError):
+            GBDTCostModel.from_json(json.dumps(blob))
+
+    def test_set_task_data_replaces_one_pool_only(self):
+        m = GBDTCostModel(n_trees=4)
+        m.set_task_data("a", *_rand_pool(20, seed=1))
+        m.set_task_data("b", *_rand_pool(20, seed=2))
+        m.set_task_data("a", *_rand_pool(5, seed=3))  # replace, not append
+        assert m.n_samples == 25
+        assert m.tasks() == ["a", "b"]
+
+    def test_gbdtmodel_alias(self):
+        assert GBDTModel is GBDTCostModel
+
+
+class TestDistributions:
+    def test_fit_sample_deterministic_under_fixed_seed(self):
+        d = LearnedCategorical("cat", support=[0, 1, 2])
+        for dec, w in [(0, 1.0), (1, 6.0), (1, 3.0), (2, 0.5)]:
+            d.observe(dec, w)
+        d.fit()
+        draws1 = [d.sample(np.random.default_rng(7)) for _ in range(5)]
+        draws2 = [d.sample(np.random.default_rng(7)) for _ in range(5)]
+        assert draws1 == draws2
+        # the heavily-weighted decision dominates the fitted mode
+        assert d.top(1)[0][0] == 1
+
+    def test_log_prob_finite_and_orders_by_weight(self):
+        d = LearnedCategorical("tile")  # open support
+        d.observe([8, 4, 4], 9.0)
+        d.observe([4, 4, 8], 1.0)
+        d.fit()
+        lp_hot = d.log_prob([8, 4, 4])
+        lp_cold = d.log_prob([4, 4, 8])
+        lp_unseen = d.log_prob([2, 2, 32])
+        assert lp_hot > lp_cold > lp_unseen
+        assert np.isfinite(lp_unseen)
+
+    def test_registry_round_trip_preserves_sampling(self, tmp_path):
+        _, traces = _sampled_traces(count=4)
+        reg = DecisionDistributions()
+        for i, t in enumerate(traces):
+            reg.observe_trace(t, weight=1.0 + i)
+        reg.fit()
+        assert reg.fitted and len(reg) > 0
+        p = str(tmp_path / "dists.json")
+        reg.save(p)
+        reg2 = DecisionDistributions.load(p)
+        assert len(reg2) == len(reg)
+        assert reg2.observations == reg.observations
+        # identical rng stream -> identical learned overrides
+        o1 = reg.decisions_for(traces[0], np.random.default_rng(3))
+        o2 = reg2.decisions_for(traces[0], np.random.default_rng(3))
+        assert o1 == o2
+        for t in traces:
+            assert reg.log_prob(t) == pytest.approx(reg2.log_prob(t))
+
+    def test_site_keys_are_shape_generic(self):
+        _, traces = _sampled_traces(count=2)
+        keys = [
+            decision_site_key(i)
+            for i in traces[0].insts
+            if i.is_sampling and i.decision is not None
+        ]
+        keys = [k for k in keys if k]
+        assert keys, "no sampling sites found"
+        for k in keys:
+            assert k == "loc" or k.startswith(("tile/", "cat/"))
+            # no raw loop names / workload names leak into keys
+            assert "gmm" not in k
+
+    def test_with_decisions_overrides_and_validates(self):
+        func, traces = _sampled_traces(count=2)
+        trace = traces[0]
+        idx = next(
+            i
+            for i, inst in enumerate(trace.insts)
+            if inst.name == "sample_perfect_tile" and inst.decision
+        )
+        old = list(trace.insts[idx].decision)
+        new = [old[-1]] + old[:-1] if len(old) > 1 else old
+        t2 = trace.with_decisions({idx: new})
+        assert list(t2.insts[idx].decision) == new
+        # the original trace is untouched
+        assert list(trace.insts[idx].decision) == old
+
+
+class TestRolloutPruning:
+    def test_pruned_rounds_measure_only_the_slice(self):
+        func = W.get_workload("gmm", n=16, m=16, k=16)
+        cfg = SearchConfig(
+            max_trials=10,
+            init_random=4,
+            population=6,
+            measure_per_round=3,
+            generations=1,
+            rollout_factor=3,
+        )
+        s = EvolutionarySearch(
+            func, SpaceGenerator(default_modules()), config=cfg
+        ).tune()
+        assert len(s.measured) <= cfg.max_trials
+        # once the model trained, rounds oversampled and pruned back down
+        assert s.prune_events, "no rollout pruning happened"
+        for ev in s.prune_events:
+            assert ev["scored"] > ev["kept"]
+            assert ev["kept"] <= cfg.population
+        # measured-per-round never exceeds the e-greedy slice
+        rounds = len(s.failure_counts)
+        assert len(s.measured) <= rounds * cfg.measure_per_round
+
+    def test_rollout_disabled_without_trained_model(self):
+        func = W.get_workload("gmm", n=16, m=16, k=16)
+        cfg = SearchConfig(
+            max_trials=4, init_random=4, population=6,
+            measure_per_round=4, rollout_factor=3,
+        )
+        s = EvolutionarySearch(
+            func, SpaceGenerator(default_modules()), config=cfg
+        )
+        pool = s._propose_pool()  # model untrained: no oversampling
+        assert not s.prune_events
+        assert len(pool) <= cfg.population
+
+
+class TestDatabaseCompat:
+    def _write(self, path, payload):
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+    def test_load_tolerates_unknown_and_missing_fields(self, tmp_path):
+        func, traces = _sampled_traces(count=1)
+        tj = traces[0].to_json()
+        p = str(tmp_path / "db.json")
+        self._write(
+            p,
+            {
+                "k1": [
+                    {  # full record + a field from "the future"
+                        "workload_key": "k1",
+                        "trace_json": tj,
+                        "latency_s": 1e-3,
+                        "timestamp": 1.0,
+                        "meta": {"runner": "local"},
+                        "future_field": {"anything": True},
+                    },
+                    {  # optional fields absent -> defaults
+                        "workload_key": "k1",
+                        "trace_json": tj,
+                        "latency_s": 2e-3,
+                    },
+                    {"workload_key": "k1", "latency_s": 3e-3},  # no trace
+                    "not-a-record",
+                ],
+                "k2": [{"latency_s": 1.0}],  # nothing loadable
+            },
+        )
+        db = Database(p)
+        assert [r.latency_s for r in db.records["k1"]] == [1e-3, 2e-3]
+        assert db.records["k1"][1].meta == {}
+        assert db.records["k1"][1].timestamp == 0.0
+        assert not hasattr(db.records["k1"][0], "future_field")
+        assert "k2" not in db.records
+
+    def test_sidecar_path(self):
+        assert (
+            sidecar_path("results/tuning_db.json", "model")
+            == "results/tuning_db.model.json"
+        )
+        assert sidecar_path("db", "dists") == "db.dists.json"
+
+
+class TestWarmStart:
+    CFG = dict(
+        max_trials=8, init_random=4, population=6,
+        measure_per_round=4, generations=1, rollout_factor=2,
+    )
+
+    def test_tune_workload_persists_and_reloads(self, tmp_path):
+        dbp = str(tmp_path / "db.json")
+        cold = tune_workload(
+            "gmm", dict(n=16, m=16, k=16),
+            config=SearchConfig(**self.CFG), database=Database(dbp),
+        )
+        assert not cold.warm_started
+        assert os.path.exists(sidecar_path(dbp, "model"))
+        assert os.path.exists(sidecar_path(dbp, "dists"))
+        model, dists = load_search_state(Database(dbp))
+        assert model is not None and model.trained
+        assert dists is not None and dists.fitted
+        warm = tune_workload(
+            "gmm", dict(n=16, m=16, k=16),
+            config=SearchConfig(**self.CFG), database=Database(dbp),
+        )
+        assert warm.warm_started
+        assert np.isfinite(warm.best_latency_s)
+
+    def test_save_search_state_noop_without_path(self):
+        # in-memory database: nothing to write, nothing raised
+        save_search_state(Database(), GBDTCostModel(), DecisionDistributions())
+        save_search_state(None, None, None)
+
+    def test_task_scheduler_shares_state_across_tasks(self, tmp_path):
+        dbp = str(tmp_path / "db.json")
+        tasks = [
+            TuneTask(
+                workload_key("gmm", n=16, m=16, k=16),
+                W.get_workload("gmm", n=16, m=16, k=16),
+            ),
+            TuneTask(
+                workload_key("gmm", n=24, m=24, k=24),
+                W.get_workload("gmm", n=24, m=24, k=24),
+            ),
+        ]
+        ts = TaskScheduler(
+            tasks, database=Database(dbp),
+            config=SearchConfig(**self.CFG), seed=0,
+        )
+        # one model + one registry shared by every per-task search
+        assert all(s.model is ts.model for s in ts.searches)
+        assert all(s.dists is ts.dists for s in ts.searches)
+        ts.tune(total_rounds=4)
+        assert ts.model.n_samples > 0
+        assert os.path.exists(sidecar_path(dbp, "model"))
+        ts2 = TaskScheduler(
+            tasks, database=Database(dbp),
+            config=SearchConfig(**self.CFG), seed=1,
+        )
+        assert ts2.warm_started
+        assert ts2.model.trained

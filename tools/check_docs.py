@@ -1,0 +1,99 @@
+"""Check intra-repo markdown links in README.md and docs/.
+
+Scans every inline markdown link (``[text](target)``) and fails (exit 1)
+when a relative target does not exist on disk, or a ``#fragment`` does not
+match a heading anchor in the target file.  External links
+(``http(s)://``, ``mailto:``) are not fetched.  CI runs this in the docs
+job so cross-references between README.md, docs/*.md, and source files
+cannot rot silently.
+
+    python tools/check_docs.py [files...]        # default: README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def heading_anchors(path: str) -> set:
+    """GitHub-style anchors for every markdown heading in ``path``."""
+    anchors = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence or not line.startswith("#"):
+                continue
+            text = line.lstrip("#").strip()
+            # strip markdown emphasis/code markers, then slugify
+            text = re.sub(r"[*_`]", "", text)
+            slug = re.sub(r"[^\w\- ]", "", text.lower())
+            anchors.add(slug.replace(" ", "-"))
+    return anchors
+
+
+def check_file(path: str) -> list:
+    """Return a list of broken-link error strings for one markdown file."""
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                file_part, _, frag = target.partition("#")
+                dest = (
+                    os.path.normpath(os.path.join(base, file_part))
+                    if file_part
+                    else os.path.abspath(path)
+                )
+                if not os.path.exists(dest):
+                    errors.append(
+                        f"{path}:{lineno}: broken link {target!r} "
+                        f"({dest} does not exist)"
+                    )
+                    continue
+                if frag and dest.endswith(".md"):
+                    if frag.lower() not in heading_anchors(dest):
+                        errors.append(
+                            f"{path}:{lineno}: broken anchor {target!r} "
+                            f"(no heading #{frag} in {dest})"
+                        )
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or (
+        ["README.md"] + sorted(glob.glob("docs/*.md"))
+    )
+    errors = []
+    checked = 0
+    for path in args:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {checked} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
