@@ -66,6 +66,7 @@ from repro.models.registry import build_model
 from repro.search.database import Database
 from repro.search.evolutionary import SearchConfig
 from repro.search.task_scheduler import TaskScheduler
+from repro.search.tune import TuneConfig
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 JSON_PATH = REPO_ROOT / "BENCH_end_to_end.json"
@@ -169,14 +170,16 @@ def run(
             sched = TaskScheduler(
                 to_tune,
                 database=db,
-                config=SearchConfig(
-                    max_trials=trials, init_random=per_round, population=12,
-                    measure_per_round=per_round,
+                config=TuneConfig(
+                    search=SearchConfig(
+                        max_trials=trials, init_random=per_round,
+                        population=12, measure_per_round=per_round,
+                    ),
+                    runner_spec=create_runner(
+                        runner_spec, backend=backend, **runner_kwargs
+                    ),
+                    backend=backend,
                 ),
-                runner=create_runner(
-                    runner_spec, backend=backend, **runner_kwargs
-                ),
-                backend=backend,
             )
             sched.tune(total_rounds=len(to_tune) * rounds_per_task)
             sched.runner.close()

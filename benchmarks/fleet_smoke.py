@@ -1,0 +1,188 @@
+"""Fleet smoke gate: rpc:// tuning must be equivalent to local tuning.
+
+Spawns N local measurement workers, tunes one workload through an
+``rpc://host:port,...`` runner, tunes the same workload with the serial
+in-process ``local`` runner at the same seed and budget, and checks the
+resulting database records are equivalent:
+
+* both runs produce a best record under the **same workload key**;
+* both best traces round-trip through JSON and re-validate against the
+  workload (the record a later ``DispatchContext`` would serve);
+* the fleet measured the full trial budget — nothing silently dropped —
+  and (with ``--workers >= 2`` and no kill) spread batches over more than
+  one worker.
+
+``--kill-one`` kills a worker mid-run, checking the runner's
+retry-on-worker-death path end to end: the run must still complete its
+budget on the survivors and record a best.  Results (including the
+runner's per-worker telemetry) land in ``BENCH_fleet_smoke.json``; any
+failed check exits nonzero, so CI can gate on it.
+
+    PYTHONPATH=src python benchmarks/fleet_smoke.py --workers 2 --kill-one
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+from typing import Dict, List
+
+from repro.core.modules import SpaceGenerator, default_modules
+from repro.core.validator import validate_trace
+from repro.core.workloads import get_workload
+from repro.search.database import Database
+from repro.search.evolutionary import SearchConfig
+from repro.search.measure import create_runner, spawn_local_workers
+from repro.search.tune import TuneConfig, tune_workload
+
+WORKLOAD = ("gmm", dict(n=64, m=64, k=64))
+
+
+def _tune(runner_spec, db: Database, trials: int) -> "TuneResult":  # noqa: F821
+    cfg = TuneConfig(
+        search=SearchConfig(
+            max_trials=trials, init_random=max(trials // 2, 4),
+            population=8, measure_per_round=max(trials // 2, 4), seed=0,
+        ),
+        runner_spec=runner_spec,
+        warm_start=False,  # no sidecar coupling between the two runs
+    )
+    name, kwargs = WORKLOAD
+    return tune_workload(name, kwargs, config=cfg, database=db)
+
+
+def _best_record_ok(db: Database, key: str, checks: List[str]) -> bool:
+    rec = db.best(key)
+    if rec is None:
+        checks.append(f"FAIL: no record for {key}")
+        return False
+    name, kwargs = WORKLOAD
+    func = get_workload(name, **kwargs)
+    from repro.core.trace import Trace
+
+    v = validate_trace(func, Trace.from_json(rec.trace_json))
+    if not v.ok:
+        checks.append(f"FAIL: best record for {key} does not re-validate")
+        return False
+    return True
+
+
+def run(workers: int = 2, kill_one: bool = False, trials: int = 8) -> Dict:
+    backend = os.environ.get("REPRO_BACKEND")
+    checks: List[str] = []
+    ok = True
+
+    local_db = Database(None)
+    local = _tune(None, local_db, trials)
+
+    handles = spawn_local_workers(workers, backend=backend)
+    killed = threading.Event()
+    try:
+        address = ",".join(f"{h.host}:{h.port}" for h in handles)
+        runner = create_runner(f"rpc://{address}", backend=backend)
+        if kill_one:
+            # take a worker down after the first measurements land — the
+            # runner must reshard the round onto the survivors
+            orig_run = runner.run
+
+            def run_then_kill(inputs):
+                res = orig_run(inputs)
+                if not killed.is_set():
+                    handles[0].kill()
+                    killed.set()
+                return res
+
+            runner.run = run_then_kill
+        fleet_db = Database(None)
+        try:
+            fleet = _tune(runner, fleet_db, trials)
+            rpc_stats = runner.stats()
+        finally:
+            runner.close()
+    finally:
+        for h in handles:
+            h.kill()
+
+    key = local.workload_key
+    if fleet.workload_key != key:
+        checks.append(
+            f"FAIL: workload keys differ: {key} vs {fleet.workload_key}"
+        )
+        ok = False
+    ok &= _best_record_ok(local_db, key, checks)
+    ok &= _best_record_ok(fleet_db, key, checks)
+    if fleet.trials < trials:
+        checks.append(
+            f"FAIL: fleet measured {fleet.trials}/{trials} trials"
+        )
+        ok = False
+    per_worker = rpc_stats.get("per_worker", {})
+    used = sum(1 for w in per_worker.values() if w["candidates"] > 0)
+    if kill_one:
+        if rpc_stats.get("worker_deaths", 0) < 1:
+            checks.append("FAIL: --kill-one saw no worker death")
+            ok = False
+        import math
+
+        if not math.isfinite(fleet.best_latency_s):
+            checks.append("FAIL: no finite best latency after worker death")
+            ok = False
+    elif workers >= 2 and used < 2:
+        checks.append(
+            f"FAIL: only {used}/{workers} workers received candidates"
+        )
+        ok = False
+
+    return {
+        "benchmark": "fleet_smoke",
+        "ok": bool(ok),
+        "checks_failed": checks,
+        "workers": workers,
+        "kill_one": kill_one,
+        "trials_budget": trials,
+        "workload_key": key,
+        "local": {
+            "trials": local.trials,
+            "best_us": local.best_latency_s * 1e6,
+            "tuning_s": round(local.tuning_time_s, 3),
+            "records": len(local_db.records.get(key, [])),
+        },
+        "fleet": {
+            "trials": fleet.trials,
+            "best_us": fleet.best_latency_s * 1e6,
+            "tuning_s": round(fleet.tuning_time_s, 3),
+            "records": len(fleet_db.records.get(key, [])),
+        },
+        "rpc": rpc_stats,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--kill-one", action="store_true",
+                    help="kill one worker mid-run (retry-path check)")
+    ap.add_argument("--trials", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_TRIALS", "8")))
+    ap.add_argument("--json-out", default="BENCH_fleet_smoke.json")
+    args = ap.parse_args(argv)
+    row = run(workers=args.workers, kill_one=args.kill_one,
+              trials=args.trials)
+    print(json.dumps(row, indent=2))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"wrote {args.json_out}")
+    if not row["ok"]:
+        for c in row["checks_failed"]:
+            print(c, file=sys.stderr)
+        return 1
+    print("fleet smoke OK: rpc records equivalent to local")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,7 @@ from repro.search.database import Database, sidecar_path
 from repro.search.distributions import DecisionDistributions
 from repro.search.evolutionary import SearchConfig
 from repro.search.measure import create_runner
-from repro.search.tune import tune_workload
+from repro.search.tune import TuneConfig, tune_workload
 
 WORKLOADS = [
     ("gmm", dict(n=128, m=128, k=128), True),
@@ -80,7 +80,10 @@ def _run_workloads(workloads, runner_specs, runners, cfg, prev_stats, out, csv):
         per_runner: Dict[str, Dict] = {}
         for spec in runner_specs:
             res = tune_workload(
-                name, kwargs, use_mxu=mxu, config=cfg, runner=runners[spec]
+                name, kwargs,
+                config=TuneConfig(
+                    search=cfg, use_mxu=mxu, runner_spec=runners[spec]
+                ),
             )
             # stats() is cumulative over the runner's life: report deltas
             prev = prev_stats.setdefault(spec, (0, 0))
@@ -138,8 +141,8 @@ def warm_start_comparison(
     d = tempfile.mkdtemp(prefix="repro_warm_bench_")
     cold_db = Database(os.path.join(d, "cold_db.json"))
     cold = tune_workload(
-        name, kwargs, use_mxu=mxu, config=cfg, database=cold_db,
-        backend=backend,
+        name, kwargs, database=cold_db,
+        config=TuneConfig(search=cfg, use_mxu=mxu, backend=backend),
     )
     model_path = sidecar_path(cold_db.path, "model")
     dists_path = sidecar_path(cold_db.path, "dists")
@@ -150,11 +153,13 @@ def warm_start_comparison(
     warm_cfg = _bench_config(trials)
     warm_cfg.seed = cfg.seed + 1  # transfer, not a replay of the cold rng
     warm = tune_workload(
-        name, kwargs, use_mxu=mxu, config=warm_cfg,
+        name, kwargs,
         database=Database(os.path.join(d, "warm_db.json")),
-        cost_model=GBDTCostModel.load(model_path),
-        distributions=DecisionDistributions.load(dists_path),
-        backend=backend,
+        config=TuneConfig(
+            search=warm_cfg, use_mxu=mxu, backend=backend,
+            cost_model=GBDTCostModel.load(model_path),
+            distributions=DecisionDistributions.load(dists_path),
+        ),
     )
     target = cold.best_latency_s * tol
     warm_trials = warm.trials_to(target)
@@ -185,6 +190,75 @@ def warm_start_comparison(
     return row
 
 
+def fleet_comparison(
+    smoke: bool = False,
+    backend: str = None,
+    csv: bool = True,
+    workers: int = 2,
+) -> Optional[Dict]:
+    """Fleet-vs-local tuning throughput on one workload, equal budgets.
+
+    Spawns ``workers`` local measurement worker processes, tunes through
+    an ``rpc://`` runner fanned out across them, and tunes the same
+    workload with the in-process ``local`` runner.  Reports wall-clock per
+    trial for both plus the fleet's per-worker dispatch telemetry, so the
+    JSON artifact answers "what did distributing measurement buy?".
+    """
+    from repro.search.measure import spawn_local_workers
+
+    trials = int(os.environ.get("REPRO_BENCH_TRIALS", "6" if smoke else "16"))
+    name, kwargs, mxu = (SMOKE_WORKLOADS if smoke else WORKLOADS)[0]
+    cfg = _bench_config(trials)
+    local = tune_workload(
+        name, kwargs,
+        config=TuneConfig(search=cfg, use_mxu=mxu, backend=backend),
+    )
+    try:
+        handles = spawn_local_workers(workers, backend=backend)
+    except Exception as e:  # worker spawn is environment-sensitive: report
+        if csv:
+            print(f"tuning_time/{name}/fleet,skipped,{type(e).__name__}")
+        return None
+    rpc_stats: Dict = {}
+    try:
+        address = ",".join(f"{h.host}:{h.port}" for h in handles)
+        runner = create_runner(f"rpc://{address}", backend=backend)
+        try:
+            fleet = tune_workload(
+                name, kwargs,
+                config=TuneConfig(search=cfg, use_mxu=mxu, runner_spec=runner),
+            )
+            rpc_stats = runner.stats()
+        finally:
+            runner.close()
+    finally:
+        for h in handles:
+            h.kill()
+    row = {
+        "workload": name,
+        "workers": workers,
+        "trials_budget": trials,
+        "local_trials": local.trials,
+        "local_tuning_s": local.tuning_time_s,
+        "local_s_per_trial": local.tuning_time_s / max(local.trials, 1),
+        "fleet_trials": fleet.trials,
+        "fleet_tuning_s": fleet.tuning_time_s,
+        "fleet_s_per_trial": fleet.tuning_time_s / max(fleet.trials, 1),
+        "speedup": local.tuning_time_s / max(fleet.tuning_time_s, 1e-9),
+        "local_best_us": local.best_latency_s * 1e6,
+        "fleet_best_us": fleet.best_latency_s * 1e6,
+        "rpc": rpc_stats,
+    }
+    if csv:
+        print(
+            f"tuning_time/{name}/fleet,{row['speedup']:.2f},"
+            f"workers={workers};local_s={local.tuning_time_s:.1f};"
+            f"fleet_s={fleet.tuning_time_s:.1f};"
+            f"worker_deaths={rpc_stats.get('worker_deaths', 0)}"
+        )
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -209,6 +283,15 @@ def main(argv=None):
         "--skip-warm", action="store_true",
         help="skip the cold-vs-warm learned-search comparison",
     )
+    ap.add_argument(
+        "--fleet", action="store_true",
+        help="also compare rpc:// fleet measurement (spawned local "
+             "workers) against the in-process local runner",
+    )
+    ap.add_argument(
+        "--workers", type=int, default=2,
+        help="fleet size for --fleet (default 2)",
+    )
     args = ap.parse_args(argv)
     rows = run(
         smoke=args.smoke,
@@ -220,9 +303,19 @@ def main(argv=None):
         if args.skip_warm
         else warm_start_comparison(smoke=args.smoke, backend=args.backend)
     )
+    fleet = (
+        fleet_comparison(
+            smoke=args.smoke, backend=args.backend, workers=args.workers
+        )
+        if args.fleet
+        else None
+    )
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump({"rows": rows, "warm_start": warm}, f, indent=2)
+            json.dump(
+                {"rows": rows, "warm_start": warm, "fleet": fleet},
+                f, indent=2,
+            )
         print(f"wrote {args.json_out}")
 
 

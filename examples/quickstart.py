@@ -9,11 +9,9 @@ import argparse
 import os
 import tempfile
 
+import repro
 from repro.core.workloads import gmm
 from repro.core.schedule import Schedule
-from repro.search.tune import tune_workload
-from repro.search.evolutionary import SearchConfig
-from repro.search.database import Database
 
 
 def manual_schedule_demo():
@@ -38,19 +36,19 @@ def manual_schedule_demo():
 
 def tuned_search_demo(smoke=False):
     if smoke:
-        db = Database(os.path.join(tempfile.mkdtemp(), "quickstart_db.json"))
+        db = repro.Database(
+            os.path.join(tempfile.mkdtemp(), "quickstart_db.json")
+        )
         shape = dict(n=32, m=32, k=32)
-        cfg = SearchConfig(max_trials=8, init_random=4, population=6,
-                           measure_per_round=4)
+        search = repro.SearchConfig(max_trials=8, init_random=4, population=6,
+                                    measure_per_round=4)
     else:
-        db = Database("/tmp/quickstart_db.json")
+        db = repro.Database("/tmp/quickstart_db.json")
         shape = dict(n=128, m=128, k=128)
-        cfg = SearchConfig(max_trials=32, init_random=8, population=12,
-                           measure_per_round=8)
-    res = tune_workload(
-        "gmm", shape, use_mxu=True, config=cfg, database=db,
-        verbose=not smoke,
-    )
+        search = repro.SearchConfig(max_trials=32, init_random=8,
+                                    population=12, measure_per_round=8)
+    cfg = repro.TuneConfig(search=search, use_mxu=True, verbose=not smoke)
+    res = repro.tune_workload("gmm", shape, config=cfg, database=db)
     print(f"\nbest latency      : {res.best_latency_s*1e6:9.1f} us")
     print(f"naive-jnp baseline: {res.baseline_latency_s*1e6:9.1f} us")
     print(f"speedup           : {res.speedup_vs_baseline:9.2f}x")

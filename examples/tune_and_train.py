@@ -7,11 +7,8 @@ train the model for a few hundred steps with fault-tolerant checkpointing.
 import argparse
 import tempfile
 
+import repro
 from repro.configs.base import get_config
-from repro.search.database import Database
-from repro.search.task_scheduler import TaskScheduler
-from repro.search.evolutionary import SearchConfig
-from repro.integration import extract_tasks
 from repro.launch import train as train_launcher
 
 
@@ -22,17 +19,19 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config("smollm-135m", smoke=True)
-    db = Database("/tmp/tune_and_train_db.json")
+    db = repro.Database("/tmp/tune_and_train_db.json")
 
     print("== phase 1: tune the model's tensor programs (task scheduler) ==")
     # tasks extracted automatically from the model's forward jaxpr —
     # shapes, occurrence weights and dedup all come from the program
-    sched = TaskScheduler(
-        extract_tasks(cfg, batch=1, seq=128, dispatchable_only=True),
+    sched = repro.TaskScheduler(
+        repro.extract_tasks(cfg, batch=1, seq=128, dispatchable_only=True),
         database=db,
-        config=SearchConfig(max_trials=24, init_random=6, population=8,
-                            measure_per_round=6),
-        verbose=True,
+        config=repro.TuneConfig(
+            search=repro.SearchConfig(max_trials=24, init_random=6,
+                                      population=8, measure_per_round=6),
+            verbose=True,
+        ),
     )
     best = sched.tune(total_rounds=args.rounds)
     for k, v in best.items():

@@ -18,6 +18,7 @@ a checkpoint can restore onto a different topology.
 from __future__ import annotations
 
 import threading
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -52,13 +53,15 @@ class use_mesh:
 
 
 def _axis_size(mesh: Mesh, axes) -> int:
+    """Product of the named axes' sizes; axes the mesh lacks count as 1
+    (a data-only mesh has no "model" axis — treat it as unsplit)."""
     if axes is None:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
     out = 1
     for a in axes:
-        out *= mesh.shape[a]
+        out *= mesh.shape[a] if a in mesh.axis_names else 1
     return out
 
 
@@ -78,10 +81,19 @@ def _dp_axes(mesh: Mesh):
 
 
 def _resolve_dim(mesh: Mesh, size: int, chain: Sequence) -> Optional[Any]:
-    """First candidate in the chain whose mesh size divides ``size``."""
+    """First candidate in the chain whose mesh size divides ``size``.
+
+    Candidates naming an axis the mesh doesn't have are skipped (not
+    treated as size-1 matches): a PartitionSpec may only reference real
+    mesh axes, so e.g. "model" is simply not an option on a data-only
+    mesh."""
+    names = set(mesh.axis_names)
     for cand in chain:
         if cand is None:
             return None
+        axes = (cand,) if isinstance(cand, str) else tuple(cand)
+        if any(a not in names for a in axes):
+            continue
         if size % _axis_size(mesh, cand) == 0:
             return cand
     return None
@@ -331,3 +343,84 @@ def cache_shardings(mesh: Mesh, cache: Any) -> Any:
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Per-shard workload shapes (mesh-aware task extraction + dispatch)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardedWorkload:
+    """How one tuned-workload call partitions over a mesh.
+
+    ``kwargs`` are the *per-shard* workload shape kwargs (what to tune and
+    what key to look up); ``dim_axes`` maps workload dim names (``m``,
+    ``n``, ``b``, ``h``/``kvh``) to the mesh axis (or dp-axis tuple) that
+    splits them — the dispatch layer turns this into ``shard_map``
+    PartitionSpecs.
+    """
+
+    kwargs: Dict[str, Any]
+    dim_axes: Dict[str, Any]
+
+
+def shard_workload(
+    op: str, kwargs: Dict[str, Any], mesh: Optional[Mesh]
+) -> Optional[ShardedWorkload]:
+    """Per-shard shape of one tuned workload under a mesh.
+
+    The single source of the fleet's data-parallel/tensor-parallel rules
+    for *tuned kernels*: :mod:`repro.integration.extract` uses it to
+    decide which shapes to tune when a mesh is active, and
+    :class:`repro.integration.dispatch.DispatchContext` uses the same
+    rule to pick the per-shard db key it serves inside ``shard_map`` —
+    extraction and dispatch can never disagree on the key.
+
+    Dims shard only when the mesh axis size divides them exactly
+    (matching the fallback-chain philosophy above); contraction dims
+    (``k``, ``s`` of attention scores) never shard — every shard computes
+    an exact local result and no cross-shard reduction is needed.
+    Returns ``None`` when the op is not mesh-servable or nothing divides.
+    """
+    if mesh is None:
+        return None
+    dp = _dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    mdl = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    kw = dict(kwargs)
+    axes: Dict[str, Any] = {}
+    if op == "dense":
+        # rows over data-parallel, columns over tensor-parallel; the
+        # contraction dim k stays whole
+        if dpn > 1 and kw.get("m", 0) % dpn == 0 and kw.get("m", 0) >= dpn:
+            kw["m"] //= dpn
+            axes["m"] = dp
+        if mdl > 1 and kw.get("n", 0) % mdl == 0 and kw.get("n", 0) >= mdl:
+            kw["n"] //= mdl
+            axes["n"] = "model"
+    elif op == "batch_matmul":
+        # the leading batch dim carries heads (attention contractions) or
+        # experts (MoE): model axis first, data-parallel as fallback
+        if mdl > 1 and kw.get("b", 0) % mdl == 0 and kw.get("b", 0) >= mdl:
+            kw["b"] //= mdl
+            axes["b"] = "model"
+        elif dpn > 1 and kw.get("b", 0) % dpn == 0 and kw.get("b", 0) >= dpn:
+            kw["b"] //= dpn
+            axes["b"] = dp
+    elif op in ("attention", "attention_decode"):
+        # heads over model (q and kv head counts must both divide so GQA
+        # groups stay intact per shard), batch over data-parallel
+        h, kvh = kw.get("h", 0), kw.get("kvh", 0)
+        if mdl > 1 and h and kvh and h % mdl == 0 and kvh % mdl == 0:
+            kw["h"] //= mdl
+            kw["kvh"] //= mdl
+            axes["h"] = "model"
+        if dpn > 1 and kw.get("b", 0) % dpn == 0 and kw.get("b", 0) >= dpn:
+            kw["b"] //= dpn
+            axes["b"] = dp
+    else:
+        return None
+    if not axes:
+        return None
+    return ShardedWorkload(kwargs=kw, dim_axes=axes)

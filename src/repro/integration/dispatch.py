@@ -37,11 +37,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from ..backends.registry import get_backend, resolve_backend_spec
 from ..core.modules import SpaceGenerator, default_modules
 from ..core.tir import PrimFunc
 from ..core.validator import first_valid_schedule, validate_trace
+from ..distributed.sharding import get_mesh, shard_workload
 from ..obs import emit, metrics, trace_enabled
 from ..search.database import Database, parse_workload_key, workload_key
 
@@ -69,6 +72,10 @@ class CompiledKernel:
     grad_fn: Optional[Callable] = None  # custom_vjp-wrapped positional call
     meta: Optional[Dict[str, Any]] = None  # lowering provenance (backend,
                                            # snapped Pallas blocks, ...)
+    # (mesh, fn): the shard_map-wrapped grad_fn serving this per-shard
+    # kernel on *global* operands under that mesh; separate from grad_fn
+    # because the two expect different operand sizes
+    mesh_grad_fn: Optional[tuple] = None
 
 
 class DispatchContext:
@@ -120,6 +127,7 @@ class DispatchContext:
             "attention_fused": 0,
             "attention_tuned": 0,
             "attention_decode_tuned": 0,
+            "mesh_sharded": 0,
         }
         self.hits_by_key: Dict[str, int] = {}
         # per-key outcome table with labeled reasons — the two bare
@@ -331,6 +339,15 @@ class DispatchContext:
         m = 1
         for s in x.shape[:-1]:
             m *= int(s)
+        mesh = get_mesh()
+        if mesh is not None:
+            try:
+                out = self._mesh_dense(x, w, transpose_w, m, n, k, mesh)
+            except Exception:
+                self._note("fallback", None, "dense", "mesh_error")
+                out = None
+            if out is not None:
+                return out
         kern = self._lookup(workload_key("dense", m=m, n=n, k=k), "dense")
         if kern is None:
             return None
@@ -371,6 +388,15 @@ class DispatchContext:
             B *= int(s)
         M, K = int(a.shape[-2]), int(a.shape[-1])
         N = int(b.shape[-1])
+        mesh = get_mesh()
+        if mesh is not None:
+            try:
+                out = self._mesh_batch_matmul(a, b, B, M, N, K, bdims, mesh)
+            except Exception:
+                self._note("fallback", None, "batch_matmul", "mesh_error")
+                out = None
+            if out is not None:
+                return out
         kern = self._lookup(
             workload_key("batch_matmul", b=B, m=M, n=N, k=K), "batch_matmul"
         )
@@ -448,6 +474,19 @@ class DispatchContext:
         # 1/sqrt(d) every model path uses) and causal windows are keyed
         default_scale = scale is None or abs(scale - D**-0.5) < 1e-12
         if default_scale and not (window is not None and not causal):
+            mesh = get_mesh()
+            if mesh is not None:
+                try:
+                    out = self._mesh_attention(
+                        q, k, v, B, H, KVH, S, D,
+                        causal=causal, window=window, softcap=softcap,
+                        ref=ref, mesh=mesh,
+                    )
+                except Exception:
+                    self._note("fallback", None, "attention", "mesh_error")
+                    out = None
+                if out is not None:
+                    return out
             key = workload_key(
                 "attention", b=B, h=H, kvh=KVH, s=S, d=D,
                 causal=int(bool(causal)), window=int(window or 0),
@@ -622,6 +661,172 @@ class DispatchContext:
         x2 = x.reshape(tokens, d).astype(jnp.float32)
         out = kern.grad_fn(x2, w.astype(jnp.float32))
         return out.reshape(x.shape).astype(x.dtype)
+
+    # -- mesh-aware dispatch (shard_map-served per-shard kernels) -----------
+
+    def _mesh_kernel(self, op: str, kwargs: Dict[str, Any], mesh):
+        """(kernel, ShardedWorkload, key) for the per-shard shape of one
+        call under ``mesh``, or ``(None, sw, key)`` when the per-shard key
+        has no servable record (caller falls through to the global path).
+        The per-shard shape comes from the same
+        :func:`~repro.distributed.sharding.shard_workload` rule task
+        extraction uses, so tuned-under-mesh keys always line up."""
+        sw = shard_workload(op, kwargs, mesh)
+        if sw is None:
+            return None, None, None
+        key = workload_key(op, **sw.kwargs)
+        kern = self.kernel(key)
+        if kern is None:
+            self._note("fallback", key, op, "no_shard_record")
+            return None, sw, key
+        return kern, sw, key
+
+    def _mesh_hit(self, key: str, site: str) -> None:
+        self.stats["hits"] += 1
+        self.stats["mesh_sharded"] += 1
+        self.hits_by_key[key] = self.hits_by_key.get(key, 0) + 1
+        self._note("hit", key, site, "mesh_shard")
+
+    def _mesh_wrap(self, kern: CompiledKernel, mesh, build: Callable):
+        """Cache the shard_map-wrapped grad fn per kernel (rebuilt only if
+        a different mesh shows up)."""
+        if kern.mesh_grad_fn is None or kern.mesh_grad_fn[0] is not mesh:
+            kern.mesh_grad_fn = (mesh, build())
+        return kern.mesh_grad_fn[1]
+
+    def _mesh_dense(
+        self, x: jnp.ndarray, w: jnp.ndarray, transpose_w: bool,
+        m: int, n: int, k: int, mesh,
+    ) -> Optional[jnp.ndarray]:
+        """Serve the per-shard tuned dense kernel inside shard_map:
+        rows split over data-parallel axes, columns over the model axis,
+        contraction whole — each shard computes an exact local tile."""
+        kern, sw, key = self._mesh_kernel("dense", {"m": m, "n": n, "k": k}, mesh)
+        if kern is None:
+            return None
+        m_ax = sw.dim_axes.get("m")
+        n_ax = sw.dim_axes.get("n")
+
+        def build():
+            x_spec = P(m_ax, None)
+            w_spec = P(None, n_ax)
+            o_spec = P(m_ax, n_ax)
+
+            def body(x2, w2):
+                return kern.fn({"X": x2, "W": w2})[kern.out_name]
+
+            fwd = shard_map(
+                body, mesh=mesh, in_specs=(x_spec, w_spec),
+                out_specs=o_spec, check_rep=False,
+            )
+
+            def ref(x2, w2):
+                return jnp.einsum(
+                    "mk,kn->mn", x2, w2, preferred_element_type=jnp.float32
+                )
+
+            return _with_reference_grad(fwd, ref)
+
+        grad_fn = self._mesh_wrap(kern, mesh, build)
+        x2 = x.reshape(m, k).astype(jnp.float32)
+        w2 = w.astype(jnp.float32)
+        if transpose_w:
+            w2 = w2.T
+        out = grad_fn(x2, w2)
+        self._mesh_hit(key, "dense")
+        return out.reshape(*x.shape[:-1], n).astype(x.dtype)
+
+    def _mesh_batch_matmul(
+        self, a: jnp.ndarray, b: jnp.ndarray,
+        B: int, M: int, N: int, K: int, bdims, mesh,
+    ) -> Optional[jnp.ndarray]:
+        """Per-shard tuned batch_matmul under shard_map: the batch dim
+        (heads/experts) splits over model, else data-parallel, axes."""
+        kern, sw, key = self._mesh_kernel(
+            "batch_matmul", {"b": B, "m": M, "n": N, "k": K}, mesh
+        )
+        if kern is None:
+            return None
+        b_ax = sw.dim_axes.get("b")
+
+        def build():
+            spec = P(b_ax, None, None)
+
+            def body(a2, b2):
+                return kern.fn({"A": a2, "B": b2})[kern.out_name]
+
+            fwd = shard_map(
+                body, mesh=mesh, in_specs=(spec, spec),
+                out_specs=spec, check_rep=False,
+            )
+
+            def ref(a2, b2):
+                return jnp.einsum(
+                    "bmk,bkn->bmn", a2, b2, preferred_element_type=jnp.float32
+                )
+
+            return _with_reference_grad(fwd, ref)
+
+        grad_fn = self._mesh_wrap(kern, mesh, build)
+        a2 = a.reshape(B, M, K).astype(jnp.float32)
+        b2 = b.reshape(B, K, N).astype(jnp.float32)
+        out = grad_fn(a2, b2)
+        self._mesh_hit(key, "batch_matmul")
+        return out.reshape(*bdims, M, N)
+
+    def _mesh_attention(
+        self, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+        B: int, H: int, KVH: int, S: int, D: int,
+        *, causal, window, softcap, ref: Callable, mesh,
+    ) -> Optional[jnp.ndarray]:
+        """Per-shard tuned fused attention under shard_map: heads split
+        over the model axis (q and kv heads together, so each shard keeps
+        whole GQA groups), batch over data-parallel axes.  The sequence
+        dim stays whole — causal/window masking is position-exact."""
+        kern, sw, key = self._mesh_kernel(
+            "attention",
+            {
+                "b": B, "h": H, "kvh": KVH, "s": S, "d": D,
+                "causal": int(bool(causal)), "window": int(window or 0),
+                "softcap": float(softcap or 0.0),
+            },
+            mesh,
+        )
+        if kern is None:
+            return None
+        if not _attention_kern_servable(
+            kern, sw.kwargs["b"], sw.kwargs["h"], S
+        ):
+            self._note("fallback", key, "attention", "unservable")
+            return None
+        b_ax = sw.dim_axes.get("b")
+        h_ax = sw.dim_axes.get("h")
+        G = H // KVH
+
+        def build():
+            q_spec = P(b_ax, h_ax, None, None, None)  # (B, KVH, G, S, D)
+            kv_spec = P(b_ax, h_ax, None, None)       # (B, KVH, S, D)
+
+            def body(q5, k2, v2):
+                return kern.fn({"Q": q5, "K": k2, "V": v2})[kern.out_name]
+
+            fwd = shard_map(
+                body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
+                out_specs=q_spec, check_rep=False,
+            )
+
+            def ref5(q5, k2, v2):
+                out = ref(q5.reshape(B, H, S, D), k2, v2)
+                return out.reshape(B, KVH, G, S, D)
+
+            return _with_reference_grad(fwd, ref5)
+
+        grad_fn = self._mesh_wrap(kern, mesh, build)
+        q5 = q.reshape(B, KVH, G, S, D).astype(jnp.float32)
+        out = grad_fn(q5, k.astype(jnp.float32), v.astype(jnp.float32))
+        self._mesh_hit(key, "attention")
+        self.stats["attention_tuned"] += 1
+        return out.reshape(B, H, S, D).astype(q.dtype)
 
 
 # A structurally-lowered (non-fused) attention kernel materializes the

@@ -448,6 +448,49 @@ def _task_flops(op: str, kw: Dict[str, Any]) -> int:
     return 0
 
 
+def shard_sites(sites: Iterable[TaskSite], mesh) -> List[TaskSite]:
+    """Rewrite site shapes to the per-shard shapes a mesh would run.
+
+    Under ``shard_map`` each device executes the *local* block of every
+    primitive, so the shapes worth tuning (and the keys dispatch will look
+    up at serving time) are the per-shard ones.  Delegates the partitioning
+    rules to :func:`repro.distributed.sharding.shard_workload` — the same
+    function the dispatch layer uses — so extracted keys and served keys
+    can never drift apart.  Sites the mesh cannot split (or that
+    ``shard_workload`` declines) pass through unchanged, with an
+    ``extract.shard`` event recording each rewrite.
+    """
+    from ..distributed.sharding import shard_workload
+
+    if mesh is None:
+        return list(sites)
+    out: List[TaskSite] = []
+    for s in sites:
+        sw = shard_workload(s.op, s.kwargs, mesh)
+        if sw is None or sw.kwargs == s.kwargs:
+            out.append(s)
+            continue
+        metrics().inc("extract.shard", op=s.op)
+        if trace_enabled():
+            emit(
+                "extract.shard",
+                op=s.op,
+                global_kwargs=dict(s.kwargs),
+                shard_kwargs=dict(sw.kwargs),
+                axes={k: list(v) if isinstance(v, tuple) else v
+                      for k, v in sw.dim_axes.items()},
+            )
+        out.append(
+            TaskSite(
+                op=s.op,
+                kwargs=dict(sw.kwargs),
+                count=s.count,
+                dispatchable=s.dispatchable,
+            )
+        )
+    return out
+
+
 def dedup_sites(
     sites: Iterable[TaskSite], min_task_elems: int = 4096
 ) -> List[ExtractedTask]:
@@ -501,6 +544,16 @@ def model_forward_jaxpr(cfg: ModelConfig, batch: int = 1, seq: int = TOKEN_TILE)
     return jax.make_jaxpr(lambda p, ins: T.forward(cfg, p, **ins))(params, inputs)
 
 
+def _resolve_mesh(mesh):
+    """``"auto"`` means the thread's active mesh (``use_mesh`` block);
+    ``None`` explicitly disables per-shard shaping."""
+    if isinstance(mesh, str) and mesh == "auto":
+        from ..distributed.sharding import get_mesh
+
+        return get_mesh()
+    return mesh
+
+
 def extract_tasks(
     cfg: ModelConfig,
     batch: int = 1,
@@ -510,6 +563,7 @@ def extract_tasks(
     max_tasks: int = 0,
     ops: Tuple[str, ...] = EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
+    mesh="auto",
 ) -> List[TuneTask]:
     """Extract weighted tuning tasks from a model config's forward pass.
 
@@ -518,11 +572,14 @@ def extract_tasks(
     weight x flops (the end-to-end-dominant ones); ``dispatchable_only``
     further restricts to sites the dispatch layer can swap back into the
     model — together these are what the CPU benchmark uses to spend its
-    trial budget only where it can cash it.
+    trial budget only where it can cash it.  When a mesh is active (or
+    passed explicitly) sites are rewritten to per-shard shapes first, so
+    tuning spends trials on the block sizes each device will actually run.
     """
     extracted = extract_task_specs(
         cfg, batch=batch, seq=seq, min_task_elems=min_task_elems,
         max_tasks=max_tasks, ops=ops, dispatchable_only=dispatchable_only,
+        mesh=mesh,
     )
     return [t.to_tune_task(use_mxu=use_mxu) for t in extracted]
 
@@ -535,6 +592,7 @@ def extract_task_specs(
     max_tasks: int = 0,
     ops: Tuple[str, ...] = EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
+    mesh="auto",
 ) -> List[ExtractedTask]:
     """Like :func:`extract_tasks` but returns the rich task records."""
     recorder = AttentionSiteRecorder()
@@ -545,6 +603,7 @@ def extract_task_specs(
     sites = [s for s in sites if s.op in ops]
     if dispatchable_only:
         sites = [s for s in sites if s.dispatchable]
+    sites = shard_sites(sites, _resolve_mesh(mesh))
     tasks = dedup_sites(sites, min_task_elems=min_task_elems)
     return _apply_max_tasks(cfg, tasks, max_tasks, ops, "attention")
 
@@ -618,6 +677,7 @@ def extract_decode_task_specs(
     max_tasks: int = 0,
     ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
+    mesh="auto",
 ) -> List[ExtractedTask]:
     """Decode-shape tuning tasks for a serving configuration.
 
@@ -636,6 +696,7 @@ def extract_decode_task_specs(
     sites = [s for s in sites if s.op in ops]
     if dispatchable_only:
         sites = [s for s in sites if s.dispatchable]
+    sites = shard_sites(sites, _resolve_mesh(mesh))
     tasks = dedup_sites(sites, min_task_elems=min_task_elems)
     return _apply_max_tasks(cfg, tasks, max_tasks, ops, "attention_decode")
 
@@ -649,10 +710,12 @@ def extract_decode_tasks(
     max_tasks: int = 0,
     ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
+    mesh="auto",
 ) -> List[TuneTask]:
     """Like :func:`extract_decode_task_specs` but returns ``TuneTask``s."""
     extracted = extract_decode_task_specs(
         cfg, batch=batch, max_seq=max_seq, min_task_elems=min_task_elems,
         max_tasks=max_tasks, ops=ops, dispatchable_only=dispatchable_only,
+        mesh=mesh,
     )
     return [t.to_tune_task(use_mxu=use_mxu) for t in extracted]

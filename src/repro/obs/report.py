@@ -215,6 +215,41 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
             key = f"{e.get('site', '?')}/{e.get('reason', '?')}"
             extract_skips[key] = extract_skips.get(key, 0) + 1
 
+    # -- rpc fleet -----------------------------------------------------------
+    rpc: Optional[Dict[str, Any]] = None
+    dispatches = by_type.get("measure.rpc.dispatch", [])
+    deaths = by_type.get("measure.rpc.worker_death", [])
+    retries = by_type.get("measure.rpc.retry", [])
+    if dispatches or deaths or retries:
+        workers: Dict[str, Dict[str, Any]] = {}
+        for e in dispatches:
+            row = workers.setdefault(
+                str(e.get("worker", "?")),
+                {"batches": 0, "candidates": 0, "failed_batches": 0,
+                 "dispatch_s": 0.0, "deaths": 0},
+            )
+            row["batches"] += 1
+            row["candidates"] += int(e.get("n", 0))
+            if not e.get("ok", True):
+                row["failed_batches"] += 1
+            row["dispatch_s"] += float(e.get("dur_s", 0.0))
+        for e in deaths:
+            row = workers.setdefault(
+                str(e.get("worker", "?")),
+                {"batches": 0, "candidates": 0, "failed_batches": 0,
+                 "dispatch_s": 0.0, "deaths": 0},
+            )
+            row["deaths"] += 1
+        for row in workers.values():
+            row["dispatch_s"] = round(row["dispatch_s"], 4)
+        rpc = {
+            "workers": workers,
+            "batches": len(dispatches),
+            "candidates": sum(int(e.get("n", 0)) for e in dispatches),
+            "worker_deaths": len(deaths),
+            "retries": len(retries),
+        }
+
     # -- serving -------------------------------------------------------------
     serving: Optional[Dict[str, Any]] = None
     prefills = by_type.get("serve.prefill", [])
@@ -270,6 +305,7 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         "dispatch": dispatch,
         "extract_skips": extract_skips,
         "slowest": slowest,
+        "rpc": rpc,
         "serving": serving,
     }
 
@@ -367,6 +403,17 @@ def render_text(report: Dict[str, Any]) -> str:
         for r in report["slowest"]:
             add(f"  {r['latency_us']:10.1f}us  {r['key']}  "
                 f"hash={str(r['hash'])[:12]}")
+        add("")
+    if report.get("rpc"):
+        r = report["rpc"]
+        add("-- rpc fleet --")
+        add(f"  batches={r['batches']} candidates={r['candidates']} "
+            f"worker_deaths={r['worker_deaths']} retries={r['retries']}")
+        for addr, row in sorted(r["workers"].items()):
+            add(f"  {addr}: batches={row['batches']} "
+                f"candidates={row['candidates']} "
+                f"failed_batches={row['failed_batches']} "
+                f"dispatch={row['dispatch_s']:.2f}s deaths={row['deaths']}")
         add("")
     if report["serving"]:
         s = report["serving"]

@@ -19,7 +19,14 @@ from .protocol import (  # noqa: F401
 from .registry import (  # noqa: F401
     as_runner,
     create_runner,
+    parse_runner_spec,
     register_runner,
     register_wrapper,
     runner_names,
+)
+from .rpc import (  # noqa: F401
+    PROTOCOL_VERSION,
+    ProtocolError,
+    RPCRunner,
+    spawn_local_workers,
 )

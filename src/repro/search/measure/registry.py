@@ -1,13 +1,27 @@
-"""Runner registry: measurement backends selectable by name.
+"""Runner registry: measurement backends selectable by one spec grammar.
 
-Specs compose with ``+``: the rightmost part names a base runner, parts
-to its left name wrappers applied outside-in.  Built-ins::
+Every runner spec has the shape::
 
-    "local"        in-process serial (reference)
-    "pool"         process-pool parallel with timeouts + quarantine
-    "cached+local" trace-hash cache over the serial runner
-    "cached+pool"  trace-hash cache over the pool (recommended default
-                   for tuning runs)
+    [wrapper+]name[://options]
+
+* the rightmost ``+``-separated part names a base runner, parts to its
+  left name wrappers applied outside-in;
+* ``options`` after ``://`` are ``&``-separated.  ``key=value`` segments
+  become factory kwargs (values parse as int, then float, then bool,
+  then stay strings); segments without ``=`` (e.g. ``host:port`` lists)
+  are joined into the ``address`` kwarg.
+
+Built-ins::
+
+    "local"                      in-process serial (reference)
+    "pool"                       process-pool parallel with timeouts +
+                                 crash quarantine
+    "pool://workers=4"           ... with an explicit pool width
+    "rpc://127.0.0.1:7070,7071"  fan out across measurement worker
+                                 processes (see measure/rpc.py)
+    "cached+pool"                trace-hash cache over the pool
+                                 (recommended default for tuning runs)
+    "cached+rpc://host:7070"     cache over the fleet
 
 Plugging in a new backend (e.g. a future remote/TPU runner)::
 
@@ -15,12 +29,13 @@ Plugging in a new backend (e.g. a future remote/TPU runner)::
     def _make(**kw):
         return MyRemoteRunner(**kw)
 
-after which ``tune_workload(..., runner="cached+tpu-remote")`` works.
+after which ``TuneConfig(runner_spec="cached+tpu-remote")`` works.
+Unknown names raise ``KeyError`` listing everything registered.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Any, Callable, Dict, List, Tuple
 
 from .cached import CachedRunner
 from .local import LocalRunner
@@ -53,10 +68,19 @@ def _make_local(**kw) -> Runner:
 
 
 @register_runner("pool")
-def _make_pool(**kw) -> Runner:
+def _make_pool(workers=None, **kw) -> Runner:
+    if workers is not None:  # spec-grammar alias for max_workers
+        kw.setdefault("max_workers", workers)
     r = ProcessPoolRunner(**kw)
     r.warm()  # overlap worker spawn + jax import with the caller's own work
     return r
+
+
+@register_runner("rpc")
+def _make_rpc(address: str = "", **kw) -> Runner:
+    from .rpc import RPCRunner
+
+    return RPCRunner(address=address, **kw)
 
 
 @register_wrapper("cached")
@@ -69,25 +93,74 @@ def runner_names() -> list:
     return bases + [f"{w}+{b}" for w in sorted(_WRAPPERS) for b in bases]
 
 
-def create_runner(spec: str, **kwargs) -> Runner:
-    """Instantiate a runner from a ``[wrapper+]*base`` spec string.
+def _coerce_option(v: str) -> Any:
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    return v
 
-    ``kwargs`` go to the base runner's factory; ``backend=`` (a lowering
-    -backend spec from :mod:`repro.backends.registry`) selects what the
-    runner builds candidates through.
+
+def parse_runner_spec(spec: str) -> Tuple[List[str], str, Dict[str, Any]]:
+    """Parse ``[wrapper+]name[://options]`` -> (wrappers, base, options).
+
+    >>> parse_runner_spec("pool://workers=4&timeout_s=30")
+    ([], 'pool', {'workers': 4, 'timeout_s': 30})
+    >>> parse_runner_spec("cached+rpc://127.0.0.1:7070,127.0.0.1:7071")
+    (['cached'], 'rpc', {'address': '127.0.0.1:7070,127.0.0.1:7071'})
     """
-    parts = spec.split("+")
-    base_name = parts[-1]
-    if base_name not in _RUNNERS:
-        raise KeyError(
-            f"unknown runner {base_name!r}; available: {', '.join(runner_names())}"
+    head, sep, rest = spec.partition("://")
+    parts = head.split("+")
+    if not head or any(not p for p in parts):
+        raise ValueError(
+            f"malformed runner spec {spec!r}: expected [wrapper+]name[://options]"
         )
-    runner = _RUNNERS[base_name](**kwargs)
-    for w in reversed(parts[:-1]):
+    *wrappers, base = parts
+    options: Dict[str, Any] = {}
+    address: List[str] = []
+    if sep:
+        for seg in rest.split("&"):
+            if not seg:
+                continue
+            key, eq, value = seg.partition("=")
+            if eq and key.isidentifier():
+                options[key] = _coerce_option(value)
+            else:
+                # bare segments (host:port lists) form the address
+                address.append(seg)
+    if address:
+        options["address"] = ",".join(address)
+    return wrappers, base, options
+
+
+def create_runner(spec: str, **kwargs) -> Runner:
+    """Instantiate a runner from a ``[wrapper+]name[://options]`` spec.
+
+    ``kwargs`` go to the base runner's factory; spec options win over
+    ``kwargs`` on collision.  ``backend=`` (a lowering-backend spec from
+    :mod:`repro.backends.registry`) selects what the runner builds
+    candidates through.
+    """
+    wrappers, base, options = parse_runner_spec(spec)
+    if base not in _RUNNERS:
+        raise KeyError(
+            f"unknown runner {base!r}; available: {', '.join(runner_names())}"
+        )
+    for w in wrappers:  # validate before the factory spawns anything
         if w not in _WRAPPERS:
             raise KeyError(
-                f"unknown runner wrapper {w!r}; available: {', '.join(sorted(_WRAPPERS))}"
+                f"unknown runner wrapper {w!r}; available: "
+                f"{', '.join(sorted(_WRAPPERS))}"
             )
+    merged = {**kwargs, **options}
+    try:
+        runner = _RUNNERS[base](**merged)
+    except TypeError as e:
+        raise ValueError(f"invalid options for runner {base!r}: {e}") from e
+    for w in reversed(wrappers):
         runner = _WRAPPERS[w](runner)
     return runner
 

@@ -61,43 +61,37 @@ class TaskScheduler:
         self,
         tasks: Sequence[TuneTask],
         database: Optional[Database] = None,
-        config: Optional[SearchConfig] = None,
-        runner=None,  # registry spec str, measure.Runner, or legacy LocalRunner
-        backend: Optional[str] = None,  # lowering-backend spec for runners
-                                        # created here (None -> REPRO_BACKEND)
-        verbose: bool = False,
-        patience: int = 4,
-        rel_improvement: float = 1e-3,
-        seed: Optional[int] = None,
-        seed_defaults: bool = True,
-        cost_model: Optional[GBDTCostModel] = None,
-        distributions: Optional[DecisionDistributions] = None,
-        warm_start: bool = True,
+        config=None,  # TuneConfig (or bare SearchConfig for search knobs)
+        **legacy,  # old loose kwargs (runner=, backend=, verbose=, ...)
+        # forwarded onto the config through a once-warning shim
     ):
-        from .tune import load_search_state
+        from .tune import coerce_tune_config, load_search_state
 
+        tc = coerce_tune_config(config, legacy, "TaskScheduler")
         self.tasks = list(tasks)
         self.db = database
         # one shared runner across tasks: a caching runner then dedups
         # identical candidates across sibling tasks with equal shapes
-        self.runner = as_runner(runner, backend=backend)
+        self.runner = as_runner(tc.runner_spec, backend=tc.backend)
         self.backend = getattr(self.runner, "backend", "jnp")
-        cfg = config or SearchConfig()
-        self.verbose = verbose
+        cfg = tc.search or SearchConfig()
+        self.verbose = tc.verbose
         # verbose=True is a console-sink alias for the round events the
         # tracer records (the old per-round print() path)
-        self._console = ConsoleSink() if verbose else None
-        self.patience = patience
-        self.rel_improvement = rel_improvement
-        self.seed_defaults = seed_defaults
-        self.rng = np.random.default_rng(seed if seed is not None else cfg.seed)
+        self._console = ConsoleSink() if tc.verbose else None
+        self.patience = tc.patience
+        self.rel_improvement = tc.rel_improvement
+        self.seed_defaults = tc.seed_defaults
+        self.rng = np.random.default_rng(
+            tc.seed if tc.seed is not None else cfg.seed
+        )
         # shared learned state: one model + one distribution registry for
         # every task (cross-task transfer), warm-started from the
         # database's sidecar files when present (cross-run transfer)
-        self.warm_start = warm_start
+        self.warm_start = tc.warm_start
         self.warm_started = False
-        model, dists = cost_model, distributions
-        if warm_start and (model is None or dists is None):
+        model, dists = tc.cost_model, tc.distributions
+        if tc.warm_start and (model is None or dists is None):
             loaded_model, loaded_dists = load_search_state(database)
             if model is None and loaded_model is not None:
                 model, self.warm_started = loaded_model, True

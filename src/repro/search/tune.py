@@ -1,14 +1,19 @@
 """Top-level tuning API.
 
 ``tune_workload`` = paper Figure 7 end-to-end for one tensor program.
-``apply_best`` replays the best database trace and returns the lowered
-executable — the integration point used by models and benchmarks.
+``TuneConfig`` is the session object every tuning entrypoint
+(:func:`tune_workload`, :class:`~repro.search.task_scheduler.TaskScheduler`,
+the benchmarks) accepts: search knobs plus runner/backend/learned-state
+wiring in one place.  ``apply_best`` replays the best database trace and
+returns the lowered executable — the integration point used by models and
+benchmarks.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional, Sequence
+import warnings
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Sequence
 
 
 from ..backends.registry import get_backend, resolve_backend_spec
@@ -24,6 +29,98 @@ from .distributions import DecisionDistributions
 from .evolutionary import EvolutionarySearch, SearchConfig
 from .measure import MeasureInput, as_runner
 from .runner import LocalRunner
+
+
+@dataclass
+class TuneConfig:
+    """One object for a whole tuning session.
+
+    Collapses the loose kwargs that used to ride on every tuning
+    entrypoint.  ``search`` carries the evolutionary-search knobs
+    (:class:`~repro.search.evolutionary.SearchConfig`); the rest wires
+    measurement (``runner_spec`` — a registry spec string like
+    ``"cached+pool"`` / ``"rpc://host:7070"``, or a built ``Runner``),
+    lowering (``backend``), the search space (``modules`` / ``use_mxu``)
+    and learned-state transfer (``warm_start``, ``cost_model``,
+    ``distributions``).  Scheduler-only knobs (``patience``,
+    ``rel_improvement``, ``seed``, ``seed_defaults``) are ignored by
+    single-workload :func:`tune_workload`.
+    """
+
+    search: Optional[SearchConfig] = None
+    runner_spec: Any = None   # registry spec str, measure.Runner, or legacy
+    backend: Optional[str] = None  # lowering-backend spec; None -> ambient
+    modules: Optional[Sequence[Module]] = None
+    use_mxu: bool = False
+    warm_start: bool = True
+    verbose: bool = False
+    cost_model: Optional[GBDTCostModel] = None
+    distributions: Optional[DecisionDistributions] = None
+    # task-scheduler knobs
+    patience: int = 4
+    rel_improvement: float = 1e-3
+    seed: Optional[int] = None
+    seed_defaults: bool = True
+
+
+# legacy kwarg -> TuneConfig field, for the deprecation shim below
+_LEGACY_KWARGS = {
+    "runner": "runner_spec",
+    "backend": "backend",
+    "modules": "modules",
+    "use_mxu": "use_mxu",
+    "warm_start": "warm_start",
+    "verbose": "verbose",
+    "cost_model": "cost_model",
+    "distributions": "distributions",
+    "patience": "patience",
+    "rel_improvement": "rel_improvement",
+    "seed": "seed",
+    "seed_defaults": "seed_defaults",
+}
+
+_legacy_warned = False
+
+
+def coerce_tune_config(config, legacy: Dict[str, Any], caller: str) -> TuneConfig:
+    """Normalize ``config`` + legacy kwargs into one :class:`TuneConfig`.
+
+    ``config`` may be a TuneConfig, a bare SearchConfig (wrapped as
+    ``TuneConfig(search=...)``) or None.  Legacy kwargs from the old
+    loose-kwarg signatures are forwarded onto the config — with a
+    once-per-process DeprecationWarning — so existing call sites keep
+    working.  Unknown kwargs raise TypeError like any misspelling would.
+    """
+    global _legacy_warned
+    if isinstance(config, TuneConfig):
+        cfg = replace(config)
+    elif isinstance(config, SearchConfig):
+        cfg = TuneConfig(search=config)
+    elif config is None:
+        cfg = TuneConfig()
+    else:
+        raise TypeError(
+            f"{caller}() config must be a TuneConfig or SearchConfig, "
+            f"got {type(config).__name__}"
+        )
+    if legacy:
+        unknown = sorted(set(legacy) - set(_LEGACY_KWARGS))
+        if unknown:
+            raise TypeError(
+                f"{caller}() got unexpected keyword arguments {unknown}"
+            )
+        if not _legacy_warned:
+            _legacy_warned = True
+            warnings.warn(
+                f"passing {sorted(legacy)} to {caller}() as loose kwargs is "
+                "deprecated; pass a TuneConfig instead "
+                "(e.g. config=TuneConfig(runner_spec=..., backend=...))",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        for k, v in legacy.items():
+            setattr(cfg, _LEGACY_KWARGS[k], v)
+    return cfg
 
 
 @dataclass
@@ -121,20 +218,16 @@ def save_search_state(
 def tune_workload(
     name: str,
     shape_kwargs: Optional[Dict] = None,
-    modules: Optional[Sequence[Module]] = None,
-    use_mxu: bool = False,
-    config: Optional[SearchConfig] = None,
+    config: Optional[TuneConfig] = None,
     database: Optional[Database] = None,
-    runner=None,  # registry spec str ("local", "pool", "cached+pool"),
-                  # a measure.Runner, or a legacy LocalRunner
-    backend: Optional[str] = None,  # lowering-backend spec ("jnp", "pallas");
-                                    # None -> REPRO_BACKEND env or "jnp"
-    cost_model: Optional[GBDTCostModel] = None,
-    distributions: Optional[DecisionDistributions] = None,
-    warm_start: bool = True,
-    verbose: bool = False,
+    **legacy,
 ) -> TuneResult:
     """Tune one workload end to end (paper Figure 7) and return the result.
+
+    ``config`` is a :class:`TuneConfig` (or a bare ``SearchConfig``, which
+    sets only the search knobs); the old loose kwargs (``runner=``,
+    ``backend=``, ``modules=``, ``use_mxu=``, ...) still work through a
+    deprecation shim that warns once and forwards onto the config.
 
     With a file-backed ``database`` and ``warm_start=True`` (the default),
     the GBDT cost model and the learned sampling distributions are loaded
@@ -142,23 +235,28 @@ def tune_workload(
     ``<db>.dists.json``) before the search and saved back after it — so a
     later run (or a different task sharing the database) starts with a
     trained model and a learned prior instead of uniform sampling.
-    Explicit ``cost_model`` / ``distributions`` arguments override the
+    Explicit ``cost_model`` / ``distributions`` on the config override the
     sidecars (pass the objects returned by
     :meth:`GBDTCostModel.load` / :meth:`DecisionDistributions.load` to
     transfer learned state *across* databases).
     """
     import time
 
+    cfg = coerce_tune_config(config, legacy, "tune_workload")
+    search_cfg = cfg.search
+    backend = cfg.backend
     shape_kwargs = shape_kwargs or {}
     func = get_workload(name, **shape_kwargs)
     key = workload_key(name, **shape_kwargs)
-    space = SpaceGenerator(modules if modules is not None else default_modules(use_mxu))
-    runner = as_runner(runner, backend=backend)
+    space = SpaceGenerator(
+        cfg.modules if cfg.modules is not None else default_modules(cfg.use_mxu)
+    )
+    runner = as_runner(cfg.runner_spec, backend=backend)
 
     # -- warm start: persisted model + distributions beside the database --
     warm_started = False
-    model, dists = cost_model, distributions
-    if warm_start and (model is None or dists is None):
+    model, dists = cfg.cost_model, cfg.distributions
+    if cfg.warm_start and (model is None or dists is None):
         loaded_model, loaded_dists = load_search_state(database)
         if model is None and loaded_model is not None:
             model, warm_started = loaded_model, True
@@ -191,13 +289,13 @@ def tune_workload(
             runner=runner,
             database=database,
             workload_key=key,
-            config=config,
+            config=search_cfg,
             cost_model=model,
             distributions=dists,
-            verbose=verbose,
+            verbose=cfg.verbose,
         ).tune()
     dt = time.perf_counter() - t0
-    if warm_start:
+    if cfg.warm_start:
         save_search_state(database, search.model, search.dists)
     if search.best_trace is not None:
         # re-verify the winner through the same runner: with a caching

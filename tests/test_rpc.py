@@ -1,0 +1,314 @@
+"""RPC measurement fleet: wire codecs, spec grammar, fan-out runner
+behavior against in-process stub workers (ordering, worker death,
+quarantine, fleet exhaustion)."""
+
+import socket
+import threading
+
+import pytest
+
+from repro.core.trace import Instruction, Trace, new_expr_rv
+from repro.search.measure import (
+    MeasureInput,
+    MeasureResult,
+    PROTOCOL_VERSION,
+    ProtocolError,
+    RPCRunner,
+    create_runner,
+    parse_runner_spec,
+    runner_names,
+)
+from repro.search.measure.rpc import (
+    check_version,
+    decode_measure_input,
+    decode_measure_result,
+    encode_measure_input,
+    encode_measure_result,
+    parse_addresses,
+    recv_message,
+    results_response,
+    send_message,
+)
+
+
+def tiny_trace(decision: int = 1) -> Trace:
+    return Trace(
+        [
+            Instruction(
+                "sample_categorical",
+                [],
+                {"candidates": [0, 1, 2, 3]},
+                [new_expr_rv(decision)],
+                decision,
+            )
+        ]
+    )
+
+
+def mi(key: str = "gmm/k=8/m=8/n=8", decision: int = 1) -> MeasureInput:
+    return MeasureInput(key, None, tiny_trace(decision))
+
+
+# -- wire codecs -----------------------------------------------------------
+
+
+class TestWireCodecs:
+    def test_measure_input_roundtrip_rebuilds_func(self):
+        d = encode_measure_input(mi("gmm/k=8/m=8/n=8", decision=2))
+        back = decode_measure_input(d)
+        assert back.workload_key == "gmm/k=8/m=8/n=8"
+        assert back.func is not None  # rebuilt from the registry
+        assert back.trace.insts[0].decision == 2
+
+    def test_measure_result_roundtrip_preserves_meta(self):
+        r = MeasureResult(
+            1.25e-4, "", build_time_s=0.5, run_time_s=0.1,
+            meta={"backend": "jnp", "pallas_blocks_snapped": True},
+        )
+        back = decode_measure_result(encode_measure_result(r))
+        assert back.latency_s == pytest.approx(1.25e-4)
+        assert back.meta == r.meta
+        assert back.build_time_s == 0.5
+
+    def test_inf_latency_travels_as_null(self):
+        d = encode_measure_result(MeasureResult(float("inf"), "boom"))
+        assert d["latency_s"] is None
+        back = decode_measure_result(d)
+        assert back.latency_s == float("inf")
+        assert back.error == "boom"
+
+    def test_version_mismatch_rejected(self):
+        with pytest.raises(ProtocolError, match="version mismatch"):
+            check_version({"v": PROTOCOL_VERSION + 1, "type": "ping"})
+        with pytest.raises(ProtocolError):
+            check_version({"type": "ping"})  # missing version entirely
+
+    def test_parse_addresses(self):
+        assert parse_addresses("127.0.0.1:7070,host2:7071") == [
+            ("127.0.0.1", 7070), ("host2", 7071),
+        ]
+        assert parse_addresses("7070") == [("127.0.0.1", 7070)]
+        with pytest.raises(ValueError, match="malformed rpc address"):
+            parse_addresses("host:notaport")
+
+
+# -- runner spec grammar ---------------------------------------------------
+
+
+class TestSpecGrammar:
+    def test_options_coerce(self):
+        wrappers, base, opts = parse_runner_spec(
+            "pool://workers=4&timeout_s=30.5&verbose=true&tag=x"
+        )
+        assert (wrappers, base) == ([], "pool")
+        assert opts == {
+            "workers": 4, "timeout_s": 30.5, "verbose": True, "tag": "x"
+        }
+
+    def test_bare_segments_form_address(self):
+        wrappers, base, opts = parse_runner_spec(
+            "cached+rpc://127.0.0.1:7070,127.0.0.1:7071"
+        )
+        assert wrappers == ["cached"]
+        assert base == "rpc"
+        assert opts == {"address": "127.0.0.1:7070,127.0.0.1:7071"}
+
+    def test_malformed_spec_raises(self):
+        with pytest.raises(ValueError, match="malformed runner spec"):
+            parse_runner_spec("+local")
+
+    def test_unknown_names_list_registry(self):
+        with pytest.raises(KeyError, match="available:"):
+            create_runner("warp-drive")
+        with pytest.raises(KeyError, match="wrapper"):
+            create_runner("bogus+local")
+
+    def test_runner_names_include_wrappers(self):
+        names = runner_names()
+        assert "rpc" in names and "local" in names
+        assert "cached+rpc" in names and "cached+pool" in names
+
+    def test_invalid_options_raise_value_error(self):
+        with pytest.raises(ValueError, match="invalid options"):
+            create_runner("local://bogus_option=1")
+
+
+# -- stub fleet ------------------------------------------------------------
+
+
+class StubWorker:
+    """In-process protocol speaker: pongs handshakes, returns canned
+    latencies keyed by each input's trace decision, optionally dies."""
+
+    def __init__(self, backend="jnp", die_after_measures=None, latency=1e-4,
+                 die_forever=True):
+        self.backend = backend
+        self.die_after = die_after_measures
+        self.die_forever = die_forever
+        self.latency = latency
+        self.measures = 0
+        self.srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.srv.bind(("127.0.0.1", 0))
+        self.srv.listen(4)
+        self.port = self.srv.getsockname()[1]
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._serve, daemon=True)
+        self.thread.start()
+
+    @property
+    def addr(self):
+        return f"127.0.0.1:{self.port}"
+
+    def _serve(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self.srv.accept()
+            except OSError:
+                return
+            try:
+                self._handle(conn)
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+    def _handle(self, conn):
+        rfile = conn.makefile("rb")
+        while True:
+            try:
+                msg = recv_message(rfile)
+            except (ProtocolError, OSError):
+                return
+            if msg is None:
+                return
+            if msg.get("type") == "ping":
+                send_message(conn, {
+                    "v": PROTOCOL_VERSION, "type": "pong",
+                    "backend": self.backend, "runner": "stub", "pid": 0,
+                })
+                continue
+            if msg.get("type") == "measure":
+                self.measures += 1
+                if self.die_after is not None and self.measures > self.die_after:
+                    # drop the connection mid-request: worker death.  A
+                    # real crashed process stays gone, so by default the
+                    # listener dies too — reconnection must fail.
+                    if self.die_forever:
+                        self.close()
+                    return
+                results = [
+                    MeasureResult(
+                        self.latency * (1 + d["trace"].count("x")),
+                        "",
+                        meta={"decision": i, "worker": self.addr},
+                    )
+                    for i, d in enumerate(msg["inputs"])
+                ]
+                send_message(conn, results_response(results))
+                continue
+            if msg.get("type") == "shutdown":
+                send_message(conn, {"v": PROTOCOL_VERSION, "type": "bye"})
+                self.close()
+                return
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.srv.close()
+        except OSError:
+            pass
+
+
+@pytest.fixture
+def two_stubs():
+    stubs = [StubWorker(), StubWorker()]
+    yield stubs
+    for s in stubs:
+        s.close()
+
+
+class TestRPCRunner:
+    def test_shards_across_workers_in_order(self, two_stubs):
+        addr = ",".join(s.addr for s in two_stubs)
+        r = RPCRunner(address=addr, timeout_s=10.0, connect_timeout_s=10.0)
+        inputs = [mi(decision=i % 4) for i in range(5)]
+        results = r.run(inputs)
+        assert len(results) == 5
+        assert all(res.ok for res in results)
+        # order preserved: each worker's canned meta records the position
+        # inside its shard, and shards are contiguous
+        stats = r.stats()
+        per = stats["per_worker"]
+        assert sum(w["candidates"] for w in per.values()) == 5
+        assert all(w["candidates"] > 0 for w in per.values())
+        r.close()
+
+    def test_worker_death_retries_on_survivor(self, two_stubs):
+        dead = StubWorker(die_after_measures=0)
+        addr = f"{dead.addr},{two_stubs[0].addr}"
+        r = RPCRunner(address=addr, timeout_s=10.0, connect_timeout_s=10.0)
+        results = r.run([mi(decision=i % 4) for i in range(4)])
+        assert len(results) == 4
+        assert all(res.ok for res in results)  # nothing lost to the death
+        stats = r.stats()
+        assert stats["worker_deaths"] >= 1
+        assert stats["retries"] >= 1
+        r.close()
+        dead.close()
+
+    def test_all_workers_dead_returns_inf_not_raise(self):
+        dying = [StubWorker(die_after_measures=0) for _ in range(2)]
+        addr = ",".join(s.addr for s in dying)
+        r = RPCRunner(address=addr, timeout_s=5.0, connect_timeout_s=10.0)
+        results = r.run([mi(decision=1), mi(decision=2)])
+        assert len(results) == 2
+        assert all(not res.ok for res in results)
+        assert all("rpc" in res.error for res in results)
+        r.close()
+        for s in dying:
+            s.close()
+
+    def test_backend_mismatch_refused_at_handshake(self):
+        s = StubWorker(backend="pallas")
+        with pytest.raises(RuntimeError, match="backend"):
+            RPCRunner(address=s.addr, connect_timeout_s=10.0)
+        s.close()
+
+    def test_unreachable_worker_raises_connection_error(self):
+        # bind-then-close guarantees a dead port
+        tmp = socket.socket()
+        tmp.bind(("127.0.0.1", 0))
+        port = tmp.getsockname()[1]
+        tmp.close()
+        with pytest.raises(ConnectionError, match="cannot reach"):
+            RPCRunner(address=f"127.0.0.1:{port}", connect_timeout_s=0.5)
+
+    def test_quarantine_after_repeat_crashes(self):
+        # workers that die on every measure but come straight back up:
+        # each isolated retry also kills a worker, so the crash is
+        # attributed to the candidate; at crash_threshold the trace is
+        # quarantined and later runs reject it without touching a worker
+        dying = [
+            StubWorker(die_after_measures=0, die_forever=False)
+            for _ in range(2)
+        ]
+        addr = ",".join(s.addr for s in dying)
+        r = RPCRunner(
+            address=addr, timeout_s=5.0, connect_timeout_s=10.0,
+            crash_threshold=2,
+        )
+        bad = mi(decision=3)
+        out = []
+        for _ in range(3):
+            out.extend(r.run([bad]))
+        assert all(not res.ok for res in out)
+        stats = r.stats()
+        assert stats["crashes"] >= 2
+        assert stats["quarantined_traces"] == 1
+        assert stats["quarantine_rejects"] >= 1
+        assert "quarantined" in out[-1].error
+        r.close()
+        for s in dying:
+            s.close()

@@ -1,0 +1,75 @@
+"""TuneConfig and the loose-kwarg deprecation shim."""
+
+import warnings
+
+import pytest
+
+import repro.search.tune as tune_mod
+from repro.search.evolutionary import SearchConfig
+from repro.search.tune import TuneConfig, coerce_tune_config, tune_workload
+
+
+@pytest.fixture
+def fresh_warning_state(monkeypatch):
+    """The shim warns once per process; reset so each test sees it."""
+    monkeypatch.setattr(tune_mod, "_legacy_warned", False)
+
+
+class TestCoerce:
+    def test_legacy_kwargs_equal_explicit_config(self, fresh_warning_state):
+        explicit = TuneConfig(
+            runner_spec="cached+pool", backend="jnp", use_mxu=True,
+            verbose=True, warm_start=False, patience=7,
+        )
+        with pytest.warns(DeprecationWarning, match="pass a TuneConfig"):
+            shimmed = coerce_tune_config(
+                None,
+                dict(runner="cached+pool", backend="jnp", use_mxu=True,
+                     verbose=True, warm_start=False, patience=7),
+                "tune_workload",
+            )
+        assert shimmed == explicit
+
+    def test_warns_exactly_once_per_process(self, fresh_warning_state):
+        with pytest.warns(DeprecationWarning):
+            coerce_tune_config(None, {"use_mxu": True}, "tune_workload")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # a second warning would raise
+            coerce_tune_config(None, {"use_mxu": True}, "tune_workload")
+
+    def test_unknown_legacy_kwarg_raises_type_error(self):
+        with pytest.raises(TypeError, match="unexpected keyword arguments"):
+            coerce_tune_config(None, {"runer": "pool"}, "tune_workload")
+
+    def test_search_config_wraps(self):
+        sc = SearchConfig(max_trials=7)
+        cfg = coerce_tune_config(sc, {}, "tune_workload")
+        assert isinstance(cfg, TuneConfig)
+        assert cfg.search is sc
+
+    def test_bad_config_type_raises(self):
+        with pytest.raises(TypeError, match="TuneConfig or SearchConfig"):
+            coerce_tune_config("pool", {}, "tune_workload")
+
+    def test_caller_config_never_mutated(self, fresh_warning_state):
+        base = TuneConfig(verbose=False)
+        with pytest.warns(DeprecationWarning):
+            out = coerce_tune_config(base, {"verbose": True}, "TaskScheduler")
+        assert out.verbose is True
+        assert base.verbose is False  # legacy kwargs land on a copy
+
+
+@pytest.mark.slow
+def test_tune_workload_legacy_kwargs_still_tune(fresh_warning_state):
+    """The old loose-kwarg call shape still drives a real (tiny) tuning
+    run through the shim, with the deprecation warning."""
+    sc = SearchConfig(max_trials=4, init_random=4, population=4,
+                      measure_per_round=4, seed=0)
+    with pytest.warns(DeprecationWarning):
+        res = tune_workload(
+            "gmm", dict(n=16, m=16, k=16), config=sc,
+            runner="local", warm_start=False,
+        )
+    assert res.trials >= 1
+    assert res.best_latency_s > 0
+    assert res.runner_name == "local"
