@@ -24,11 +24,14 @@ shows up here even when forward timings stay plausible.
 
 With ``--serving`` the gate instead reads a ``BENCH_serving.json``
 (``benchmarks/serving_load.py`` output): the tuned/untuned decode tok/s
-ratio must clear ``--min-decode-ratio`` (after ``--tolerance``), and the
+ratio must clear ``--min-decode-ratio`` (after ``--tolerance``), the
 run must have actually dispatched at least one decode-shape attention
 task *and* one decode-shape dense/batch_matmul task — decode dispatch
 silently regressing to the reference path would leave throughput
-plausible but untuned.
+plausible but untuned — and, when the payload carries a saturation
+sweep, the paged serving tier must sustain strictly greater tok/s than
+the slot-pool baseline at the highest swept arrival rate
+(``--require-sweep`` makes a missing sweep itself a failure).
 
 Usage::
 
@@ -78,9 +81,11 @@ def check_serving(
     path: Path,
     min_decode_ratio: float = 1.0,
     tolerance: float = 0.05,
+    require_sweep: bool = False,
 ) -> int:
-    """Gate a ``serving_load.py`` payload: decode throughput ratio plus
-    decode-shape dispatch coverage (attention AND dense/bmm)."""
+    """Gate a ``serving_load.py`` payload: decode throughput ratio,
+    decode-shape dispatch coverage (attention AND dense/bmm), and the
+    paged-vs-slot-pool saturation sweep at the highest swept rate."""
     payload = json.loads(Path(path).read_text())
     failures = []
     ratio = float(payload.get("decode_ratio", 0.0))
@@ -108,6 +113,33 @@ def check_serving(
             "no decode-shape dense/batch_matmul task dispatched "
             f"(keys: {keys or 'none'})"
         )
+    sweep = payload.get("sweep") or []
+    if not sweep:
+        msg = "no saturation sweep in payload"
+        if require_sweep:
+            failures.append(msg)
+        else:
+            print(f"{msg} (not required)")
+    else:
+        top = max(sweep, key=lambda r: r.get("rate_req_s", 0.0))
+        paged = (top.get("paged") or {}).get("tok_s")
+        base = (top.get("slot_pool") or {}).get("tok_s")
+        rate = top.get("rate_req_s")
+        if paged is None or base is None:
+            failures.append(
+                f"sweep row at rate {rate} lacks paged/slot_pool tok_s"
+            )
+        else:
+            status = "ok" if paged > base else "REGRESSION"
+            print(
+                f"sweep@{rate:g} req/s: paged={paged} tok/s vs "
+                f"slot_pool={base} tok/s [{status}]"
+            )
+            if not paged > base:
+                failures.append(
+                    f"paged tier {paged} tok/s not strictly greater than "
+                    f"slot-pool baseline {base} tok/s at {rate:g} req/s"
+                )
     if failures:
         print("FAIL:\n  " + "\n  ".join(failures))
         return 1
@@ -203,12 +235,17 @@ def main(argv=None) -> int:
         "--min-decode-ratio", type=float, default=1.0,
         help="floor on tuned/untuned decode tok/s (with --serving)",
     )
+    ap.add_argument(
+        "--require-sweep", action="store_true",
+        help="with --serving, fail if the payload has no saturation sweep",
+    )
     args = ap.parse_args(argv)
     if args.serving:
         rc = check_serving(
             Path(args.json_path),
             min_decode_ratio=args.min_decode_ratio,
             tolerance=args.tolerance,
+            require_sweep=args.require_sweep,
         )
         if args.report:
             msgs = check_report(Path(args.report), args.min_dispatch_hit_rate)

@@ -1,0 +1,183 @@
+"""Serving-router smoke gate: requests must survive a worker death.
+
+Spawns 2 serving workers behind the :class:`repro.serving.router
+.ServingRouter`, submits a batch of requests, kills one worker once the
+run is in flight, and checks the failover contract end to end:
+
+* every submitted request completes (the router resubmits a dead
+  worker's unfinished requests to the survivor);
+* the router actually observed the death (``worker_deaths >= 1``) and
+  resubmitted at least one request;
+* the survivor finished its share — and, without ``--kill-one``, both
+  workers completed requests (least-loaded routing spreads load).
+
+Every completed request's token stream is also checked against a
+single-worker reference run of the same prompt (greedy decoding is
+deterministic, so resubmission must not change results).  Results land
+in ``BENCH_router_smoke.json``; any failed check exits nonzero, so CI
+can gate on it.
+
+    PYTHONPATH=src python benchmarks/router_smoke.py --kill-one
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+MODEL = "smollm-135m"
+MAX_SEQ = 32
+MAX_SLOTS = 2
+PREFILL_CHUNK = 4
+PAGE_SIZE = 8
+
+
+def _prompts(n: int) -> List[List[int]]:
+    return [
+        [(i * 13 + j) % 50 + 1 for j in range(1 + (i * 7) % 12)]
+        for i in range(n)
+    ]
+
+
+def _reference_streams(prompts: List[List[int]], max_new: int) -> List[List[int]]:
+    """Single-process greedy streams to compare the router's output to."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.serving import ContinuousBatchingScheduler, ServeConfig
+
+    cfg = get_config(MODEL, smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    sched = ContinuousBatchingScheduler(
+        cfg, params,
+        config=ServeConfig(
+            max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+            page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+        ),
+    )
+    reqs = [
+        sched.submit(np.asarray(p, np.int32), max_new_tokens=max_new)
+        for p in prompts
+    ]
+    sched.run()
+    return [list(r.generated) for r in reqs]
+
+
+def run(workers: int = 2, requests: int = 8, max_new: int = 6,
+        kill_one: bool = False) -> Dict:
+    from repro.serving.router import ServingRouter
+
+    checks: List[str] = []
+    ok = True
+    prompts = _prompts(requests)
+    expected = _reference_streams(prompts, max_new)
+
+    router = ServingRouter.spawn(
+        workers, model=MODEL,
+        max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+        page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+    )
+    try:
+        t0 = time.perf_counter()
+        for p in prompts:
+            router.submit(p, max_new=max_new)
+        if kill_one:
+            # take a worker down while its requests are in flight; the
+            # router must resubmit them to the survivor
+            victim = router.workers[0]
+            deadline = time.monotonic() + 60
+            while (
+                not router._outstanding[victim.index]
+                and time.monotonic() < deadline
+            ):
+                router.poll()
+                time.sleep(0.01)
+            # kill only the process (not the router's link state) so the
+            # router discovers the death through the broken connection
+            victim.proc.kill()
+            victim.proc.wait(timeout=10)
+        router.drain(timeout_s=600)
+        elapsed = time.perf_counter() - t0
+        summary = router.summary()
+    finally:
+        router.shutdown()
+
+    done = [r for r in router.requests if r.done]
+    if len(done) != requests:
+        checks.append(
+            f"FAIL: {len(done)}/{requests} requests completed"
+        )
+        ok = False
+    for r in router.requests:
+        if r.done and r.tokens != expected[r.grid]:
+            checks.append(
+                f"FAIL: request {r.grid} stream diverged from the "
+                f"single-worker reference (resubmits={r.resubmits})"
+            )
+            ok = False
+    rstats = summary["router"]
+    if kill_one:
+        if rstats["worker_deaths"] < 1:
+            checks.append("FAIL: --kill-one saw no worker death")
+            ok = False
+        if rstats["resubmits"] < 1:
+            checks.append("FAIL: worker death triggered no resubmission")
+            ok = False
+        survivors = [w for w in summary["workers"] if w["alive"]]
+        if not survivors or sum(w["completed"] for w in survivors) == 0:
+            checks.append("FAIL: no survivor completed any request")
+            ok = False
+    elif workers >= 2:
+        used = sum(1 for w in summary["workers"] if w["completed"] > 0)
+        if used < 2:
+            checks.append(
+                f"FAIL: only {used}/{workers} workers completed requests"
+            )
+            ok = False
+
+    return {
+        "benchmark": "router_smoke",
+        "ok": bool(ok),
+        "checks_failed": checks,
+        "workers": workers,
+        "kill_one": kill_one,
+        "requests": requests,
+        "max_new": max_new,
+        "elapsed_s": round(elapsed, 3),
+        "summary": summary,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--requests", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_REQUESTS", "8")))
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--kill-one", action="store_true",
+                    help="kill one worker mid-run (failover-path check)")
+    ap.add_argument("--json-out", default="BENCH_router_smoke.json")
+    args = ap.parse_args(argv)
+    row = run(workers=args.workers, requests=args.requests,
+              max_new=args.max_new, kill_one=args.kill_one)
+    print(json.dumps(row, indent=2))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(row, f, indent=2)
+        print(f"wrote {args.json_out}")
+    if not row["ok"]:
+        for c in row["checks_failed"]:
+            print(c, file=sys.stderr)
+        return 1
+    print("router smoke OK: requests drained across workers")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

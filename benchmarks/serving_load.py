@@ -17,10 +17,18 @@ tuned in-process first (same scheduler/search stack as
 ``benchmarks/end_to_end.py``); a CI-cached database skips straight to
 dispatch.
 
+Serving runs the **paged** tier (page-table KV arena + in-tick chunked
+prefill, :class:`repro.serving.ServeConfig`); a **saturation sweep**
+then replays the same arrival schedule at increasing offered rates
+through both the paged tier and the PR 7 contiguous slot-pool baseline,
+recording sustained tok/s and p95 latency per rate.
+
 Outputs ``BENCH_serving.json`` — gated in CI by
 ``benchmarks/check_regression.py --serving``, which asserts the
-tuned/untuned decode tok/s ratio and that at least one decode-shape
-attention task *and* one dense/batch_matmul task actually dispatched.
+tuned/untuned decode tok/s ratio, that at least one decode-shape
+attention task *and* one dense/batch_matmul task actually dispatched,
+and that the paged tier sustains strictly greater tok/s than the
+slot-pool baseline at the highest swept arrival rate.
 
 Usage::
 
@@ -54,7 +62,7 @@ from repro.models.registry import build_model
 from repro.search.database import Database
 from repro.search.evolutionary import SearchConfig
 from repro.search.task_scheduler import TaskScheduler
-from repro.serving import ContinuousBatchingScheduler
+from repro.serving import ContinuousBatchingScheduler, ServeConfig
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 JSON_PATH = REPO_ROOT / "BENCH_serving.json"
@@ -109,22 +117,42 @@ def _quantile(vals: List[float], q: float) -> Optional[float]:
     return float(np.quantile(np.asarray(vals), q))
 
 
+def _make_sched(
+    cfg, params, ctx, *, slots: int, max_seq: int,
+    paged: bool, page_size: int, prefill_chunk: int,
+) -> ContinuousBatchingScheduler:
+    return ContinuousBatchingScheduler(
+        cfg, params,
+        config=ServeConfig(
+            max_slots=slots, max_seq=max_seq, paged=paged,
+            page_size=page_size, prefill_chunk=prefill_chunk,
+            dispatch=ctx,
+        ),
+    )
+
+
+def _warmup(sched: ContinuousBatchingScheduler, cfg, lens: List[int]) -> None:
+    """One request per distinct prompt length compiles every prefill
+    shape plus both tick widths before anything is timed."""
+    rng = np.random.default_rng(1234)
+    for n in sorted(lens):
+        sched.submit(rng.integers(0, cfg.vocab, n).astype(np.int32),
+                     max_new_tokens=2)
+    sched.run()
+
+
 def run_mode(
-    cfg, params, ctx, load, *, slots: int, max_seq: int, repeats: int
+    cfg, params, ctx, load, *, slots: int, max_seq: int, repeats: int,
+    page_size: int = 16, prefill_chunk: int = 8,
 ) -> Dict:
     """One serving run per repeat through a single scheduler (jit caches
     are per-scheduler, so the warmup drain pays all compiles once);
     throughput is best-of-repeats, latency comes from the same best run."""
-    sched = ContinuousBatchingScheduler(
-        cfg, params, n_slots=slots, max_seq=max_seq, dispatch=ctx,
+    sched = _make_sched(
+        cfg, params, ctx, slots=slots, max_seq=max_seq,
+        paged=True, page_size=page_size, prefill_chunk=prefill_chunk,
     )
-    # warmup: one request per distinct prompt length compiles every
-    # prefill shape plus the decode step before anything is timed
-    rng = np.random.default_rng(1234)
-    for n in sorted({len(p) for _, p, _ in load}):
-        sched.submit(rng.integers(0, cfg.vocab, n).astype(np.int32),
-                     max_new_tokens=2)
-    sched.run()
+    _warmup(sched, cfg, sorted({len(p) for _, p, _ in load}))
     best = None
     for _ in range(max(repeats, 1)):
         for k in sched.stats:
@@ -150,6 +178,68 @@ def run_mode(
     return best
 
 
+def run_sweep(
+    cfg, params, ctx, rates: List[float], *, slots: int, max_seq: int,
+    max_new: int, requests: int, lens: List[int],
+    page_size: int, prefill_chunk: int, seed: int,
+) -> List[Dict]:
+    """Saturation sweep: offered load vs sustained throughput and p95
+    latency, paged+in-tick-prefill against the PR 7 slot-pool baseline.
+
+    Both arenas replay the *same* arrival schedule at every rate (same
+    prompts, budgets, and arrival times), so any throughput gap is the
+    serving tier, not the load.  ``tok_s`` counts every processed token
+    (prefill + decode) over the replay's wall clock — the slot-pool
+    baseline pays a blocking batch=1 prefill call per admission, which
+    is exactly the head-of-line cost the in-tick chunked path removes.
+    """
+    scheds = {
+        "paged": _make_sched(
+            cfg, params, ctx, slots=slots, max_seq=max_seq,
+            paged=True, page_size=page_size, prefill_chunk=prefill_chunk,
+        ),
+        "slot_pool": _make_sched(
+            cfg, params, ctx, slots=slots, max_seq=max_seq,
+            paged=False, page_size=page_size, prefill_chunk=0,
+        ),
+    }
+    for sched in scheds.values():
+        _warmup(sched, cfg, lens)
+    rows: List[Dict] = []
+    for rate in sorted(rates):
+        # per-rate deterministic load, identical across both arenas
+        rng = np.random.default_rng(seed + int(round(rate * 1000)))
+        load = make_load(rng, requests, rate, cfg.vocab, lens, max_new)
+        row: Dict = {"rate_req_s": float(rate)}
+        for name, sched in scheds.items():
+            for k in sched.stats:
+                sched.stats[k] = 0
+            t0 = time.perf_counter()
+            reqs = replay(sched, load)
+            dt = time.perf_counter() - t0
+            processed = (
+                sched.stats["prefill_tokens"] + sched.stats["decode_tokens"]
+            )
+            gen = sum(len(r.generated) for r in reqs)
+            lat = [r.latency_s for r in reqs if r.latency_s is not None]
+            ttft = [r.ttft_s for r in reqs if r.ttft_s is not None]
+            row[name] = {
+                "tok_s": round(processed / dt, 3) if dt > 0 else 0.0,
+                "gen_tok_s": round(gen / dt, 3) if dt > 0 else 0.0,
+                "latency_s_p95": _quantile(lat, 0.95),
+                "ttft_s_p95": _quantile(ttft, 0.95),
+                "elapsed_s": round(dt, 4),
+            }
+        rows.append(row)
+        print(
+            f"  rate={rate:g} req/s: paged={row['paged']['tok_s']} tok/s "
+            f"(p95 {row['paged']['latency_s_p95']:.4f}s)  "
+            f"slot_pool={row['slot_pool']['tok_s']} tok/s "
+            f"(p95 {row['slot_pool']['latency_s_p95']:.4f}s)"
+        )
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm-135m")
@@ -165,6 +255,15 @@ def main(argv=None) -> int:
                     help="tuning trials per decode task lacking a record")
     ap.add_argument("--repeats", type=int, default=2,
                     help="serving runs per mode; throughput is best-of")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size for the paged arena")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="in-tick prefill chunk width (tokens)")
+    ap.add_argument("--sweep-rates", default="4,16,64",
+                    help="comma-separated arrival rates (req/s) for the "
+                         "paged-vs-slot-pool saturation sweep; empty skips")
+    ap.add_argument("--sweep-requests", type=int, default=0,
+                    help="requests per sweep point (default: --requests)")
     ap.add_argument("--backend", default="jnp")
     ap.add_argument("--runner", default="local")
     ap.add_argument("--db", default=str(REPO_ROOT / "results" / "tuning_db.json"))
@@ -183,10 +282,12 @@ def main(argv=None) -> int:
         db_path = f"{root}_{args.backend}{ext}"
     Path(db_path).parent.mkdir(parents=True, exist_ok=True)
 
-    # 1. decode-shape tasks from the arena decode_step jaxpr — keyed on
-    # m = slots, t = max_seq: exactly what the scheduler's tick looks up
+    # 1. decode-shape tasks from the arena serve/decode jaxprs — keyed on
+    # m = slots, t = kv_len: exactly what the scheduler's tick looks up.
+    # chunk/paged extend the walk over the mixed-tick serve_step program
     specs = extract_decode_task_specs(
         cfg, batch=args.slots, max_seq=args.max_seq, dispatchable_only=True,
+        chunk=args.prefill_chunk, paged=True, page_size=args.page_size,
     )
     tasks = [s.to_tune_task(use_mxu=True) for s in specs]
     key_ops = {s.key: s.op for s in specs}
@@ -257,14 +358,30 @@ def main(argv=None) -> int:
     untuned = run_mode(
         cfg, params, untuned_ctx, load,
         slots=args.slots, max_seq=args.max_seq, repeats=args.repeats,
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
     )
     tuned = run_mode(
         cfg, params, tuned_ctx, load,
         slots=args.slots, max_seq=args.max_seq, repeats=args.repeats,
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
     )
     # greedy streams should agree across schedules of the same workload;
     # recorded (not gated) because reduction order differs tuned/untuned
     outputs_match = untuned.pop("outputs") == tuned.pop("outputs")
+
+    # 5. saturation sweep: paged+in-tick-prefill vs the slot-pool
+    # baseline across offered arrival rates (same tuned context for both)
+    rates = [float(r) for r in args.sweep_rates.split(",") if r.strip()]
+    sweep: List[Dict] = []
+    if rates:
+        print("saturation sweep (paged vs slot_pool):")
+        sweep = run_sweep(
+            cfg, params, tuned_ctx, rates,
+            slots=args.slots, max_seq=args.max_seq, max_new=args.max_new,
+            requests=args.sweep_requests or args.requests, lens=lens,
+            page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            seed=args.seed,
+        )
 
     ratio = (
         tuned["decode_tok_s"] / untuned["decode_tok_s"]
@@ -293,6 +410,12 @@ def main(argv=None) -> int:
             for s in specs
         ],
         "decode_dispatch_keys": decode_dispatch_keys,
+        "serving_config": {
+            "paged": True,
+            "page_size": args.page_size,
+            "prefill_chunk": args.prefill_chunk,
+        },
+        "sweep": sweep,
         "untuned": untuned,
         "tuned": tuned,
         "decode_ratio": round(ratio, 4),

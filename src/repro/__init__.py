@@ -36,6 +36,7 @@ _EXPORTS = {
     # persistence + serving
     "Database": "search.database",
     "DispatchContext": "integration.dispatch",
+    "ServeConfig": "serving.config",
     # measurement fleet
     "create_runner": "search.measure",
     "as_runner": "search.measure",
@@ -75,6 +76,7 @@ if TYPE_CHECKING:  # static-analysis view of the lazy exports
         runner_names,
     )
     from .search.task_scheduler import TaskScheduler, TuneTask  # noqa: F401
+    from .serving.config import ServeConfig  # noqa: F401
     from .search.tune import (  # noqa: F401
         TuneConfig,
         TuneResult,

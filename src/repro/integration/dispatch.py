@@ -573,7 +573,13 @@ class DispatchContext:
         """
         B, H, S, D = (int(s) for s in q.shape)
         KVH, T = int(k.shape[1]), int(k.shape[2])
-        if S != 1 or v.shape != k.shape or H % KVH != 0:
+        if S != 1:
+            # in-tick prefill chunk: a (B, C) serve_step tick runs its
+            # chunk queries through the reference staircase path; only
+            # single-token decode has a tuned kernel shape
+            self._note("fallback", None, "attention_decode", "chunked_query")
+            return None
+        if v.shape != k.shape or H % KVH != 0:
             self._note("fallback", None, "attention_decode", "shape_mismatch")
             return None
         if isinstance(window, jax.core.Tracer):

@@ -669,6 +669,51 @@ def model_decode_jaxpr(
     )
 
 
+def model_serve_jaxpr(
+    cfg: ModelConfig,
+    batch: int = 4,
+    max_seq: int = TOKEN_TILE,
+    chunk: int = 1,
+    paged: bool = False,
+    page_size: int = 16,
+    total_pages: int = 0,
+):
+    """Abstractly trace one ``serve_step`` tick (paged serving tier).
+
+    The ``chunk``-wide program the scheduler runs when in-tick prefill is
+    on (``chunk == prefill_chunk``; ``chunk == 1`` is the decode-only
+    tick), optionally through the paged cache layout — ``(L, n_pages,
+    KVH, page_size, D)`` pools plus a ``(batch, P)`` page table.  The
+    attention workload is unchanged by paging (the page view restores
+    ``t = kv_len``), but dense/bmm/rmsnorm sites key on ``m = batch *
+    chunk``, which is what the mixed tick actually runs."""
+    import jax.numpy as jnp
+
+    from ..models import transformer as T
+    from ..serving.kv import snap_page_size
+
+    params = T.param_specs(cfg)
+    cache = dict(jax.eval_shape(lambda: T.init_cache(cfg, batch, max_seq)))
+    cache["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    if paged:
+        Ln, _, kvh, kv_len, hd = cache["k"].shape
+        ps = snap_page_size(kv_len, page_size)
+        pages_per_slot = kv_len // ps
+        n_pages = int(total_pages) or batch * pages_per_slot
+        pool = jax.ShapeDtypeStruct(
+            (Ln, n_pages, kvh, ps, hd), cache["k"].dtype
+        )
+        cache["k"] = cache["v"] = pool
+        cache["page_table"] = jax.ShapeDtypeStruct(
+            (batch, pages_per_slot), jnp.int32
+        )
+    toks = jax.ShapeDtypeStruct((batch, max(1, chunk)), jnp.int32)
+    valid = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.make_jaxpr(
+        lambda p, c, t, va: T.serve_step(cfg, p, c, t, va)
+    )(params, cache, toks, valid)
+
+
 def extract_decode_task_specs(
     cfg: ModelConfig,
     batch: int = 4,
@@ -678,6 +723,9 @@ def extract_decode_task_specs(
     ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
     mesh="auto",
+    chunk: int = 0,
+    paged: bool = False,
+    page_size: int = 16,
 ) -> List[ExtractedTask]:
     """Decode-shape tuning tasks for a serving configuration.
 
@@ -687,12 +735,30 @@ def extract_decode_task_specs(
     looks up at serving-decode trace time.  ``min_task_elems`` defaults
     lower than prefill because decode shapes are small by construction
     (m = batch, not batch x seq) yet run every generated token.
+
+    ``chunk > 0`` / ``paged`` additionally walk the ``serve_step``
+    program of the paged serving tier (:func:`model_serve_jaxpr`) with
+    that chunk width, merging its sites — the mixed prefill+decode tick
+    runs dense/bmm at ``m = batch * chunk``, and tuning those keys keeps
+    in-tick prefill on tuned kernels too.  Unsupported model families
+    (SSD / encoder decoders) silently skip the serve walk.
     """
     recorder = AttentionSiteRecorder()
     with recorder:
         jaxpr = model_decode_jaxpr(cfg, batch=batch, max_seq=max_seq)
     sites = sites_from_jaxpr(jaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps)
     sites += decode_attention_sites(cfg, recorder.sites)
+    if (chunk > 0 or paged) and not (
+        cfg.attn_free or cfg.ssm_state or cfg.enc_layers
+    ):
+        with AttentionSiteRecorder():  # chunk attention has no tuned shape
+            sjaxpr = model_serve_jaxpr(
+                cfg, batch=batch, max_seq=max_seq, chunk=max(1, chunk),
+                paged=paged, page_size=page_size,
+            )
+        sites += sites_from_jaxpr(
+            sjaxpr, d_model=cfg.d_model, norm_eps=cfg.norm_eps
+        )
     sites = [s for s in sites if s.op in ops]
     if dispatchable_only:
         sites = [s for s in sites if s.dispatchable]
@@ -711,11 +777,14 @@ def extract_decode_tasks(
     ops: Tuple[str, ...] = DECODE_EXTRACTABLE_OPS,
     dispatchable_only: bool = False,
     mesh="auto",
+    chunk: int = 0,
+    paged: bool = False,
+    page_size: int = 16,
 ) -> List[TuneTask]:
     """Like :func:`extract_decode_task_specs` but returns ``TuneTask``s."""
     extracted = extract_decode_task_specs(
         cfg, batch=batch, max_seq=max_seq, min_task_elems=min_task_elems,
         max_tasks=max_tasks, ops=ops, dispatchable_only=dispatchable_only,
-        mesh=mesh,
+        mesh=mesh, chunk=chunk, paged=paged, page_size=page_size,
     )
     return [t.to_tune_task(use_mxu=use_mxu) for t in extracted]

@@ -282,3 +282,138 @@ def decode_flash_attention(
         bias,
     )
     return out.reshape(B, KVH, G, D)
+
+
+def _paged_decode_kernel(
+    table_ref,  # scalar-prefetch: (B, P) physical page ids
+    q_ref,
+    k_ref,
+    v_ref,
+    b_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    npages: int,
+    scale: float,
+    softcap: Optional[float],
+):
+    del table_ref  # consumed by the BlockSpec index maps
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (g, d)
+    k = k_ref[0, 0]  # (ps, d) — one physical page
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    # mask as data, like _decode_kernel: the (ps,) bias row covers both
+    # the per-slot length and any page the slot never wrote
+    s = s + b_ref[0][None, :]
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0, 0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == npages - 1)
+    def _done():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def paged_decode_flash_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-token decode attention reading straight through a page table.
+
+    q: (B, KVH, G, D) — one query token per sequence, GQA-grouped;
+    k_pool, v_pool: (n_pages, KVH, ps, D) — the shared page pools of a
+    :class:`~repro.serving.kv.PagedKVArena` layer; page_table: (B, P)
+    physical page ids (sentinel entries are clamped into the pool — the
+    bias must mask their positions); bias: (B, P * ps) additive mask
+    (0 attendable / -1e30 masked), shared across heads.  Returns
+    (B, KVH, G, D), numerically identical to ``decode_flash_attention``
+    over the gathered contiguous view.
+
+    The page table rides in as a scalar-prefetch operand
+    (``PrefetchScalarGridSpec``): the kv BlockSpec index maps read it to
+    aim each sequential grid step's DMA at the slot's next physical page,
+    so no gathered (B, KVH, T, D) copy of the cache is ever materialized.
+    The kv grid axis is one page per step — pages *are* the kv blocks.
+    """
+    B, KVH, G, D = q.shape
+    n_pages, _, ps, _ = k_pool.shape
+    P = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    # sentinel entries (== n_pages, one past the pool) index clamped —
+    # their bias positions are already -1e30 by the caller's contract
+    table = jnp.minimum(page_table.astype(jnp.int32), n_pages - 1)
+    kernel = functools.partial(
+        _paged_decode_kernel, npages=P, scale=scale, softcap=softcap
+    )
+    grid = (B * KVH, P)  # (batch*kv head, pages — sequential)
+
+    def qmap(bh, ki, t):
+        return (bh, 0, 0)
+
+    def kvmap(bh, ki, t):
+        return (t[bh // KVH, ki], bh % KVH, 0, 0)
+
+    def bmap(bh, ki, t):
+        return (bh // KVH, ki)  # bias is per sequence, shared across heads
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, D), qmap),
+            pl.BlockSpec((1, 1, ps, D), kvmap),
+            pl.BlockSpec((1, 1, ps, D), kvmap),
+            pl.BlockSpec((1, ps), bmap),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(
+        table,
+        q.reshape(B * KVH, G, D),
+        k_pool,
+        v_pool,
+        bias,
+    )
+    return out.reshape(B, KVH, G, D)

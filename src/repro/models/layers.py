@@ -272,7 +272,7 @@ def chunked_attention(
 
 
 def decode_attention(
-    q: jnp.ndarray,  # (B, H, 1, D)
+    q: jnp.ndarray,  # (B, H, S, D) — S = 1 (decode) or a prefill chunk
     k: jnp.ndarray,  # (B, KVH, T, D) — full cache
     v: jnp.ndarray,
     *,
@@ -281,16 +281,20 @@ def decode_attention(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
 ) -> jnp.ndarray:
-    """Single-token attention against a KV cache (serving decode).
+    """Attention against a KV cache (serving decode / chunked prefill).
 
     ``length`` may be a scalar (legacy engine: every lane at the same
     position) or a per-slot ``(B,)`` vector (continuous-batching arena:
-    each slot is at its own position).  Under an active DispatchContext
-    the whole call can swap to a tuned ``attention_decode`` kernel: the
+    each slot is at its own position).  It is the valid cache length for
+    the *first* query position; when ``S > 1`` (an in-tick prefill chunk
+    whose keys were just written to the cache) query ``c`` sees one more
+    cache position than query ``c - 1`` — the causal staircase of a
+    chunk, capped at ``T``.  Under an active DispatchContext the single-
+    token case can swap to a tuned ``attention_decode`` kernel: the
     program is static in the cache length ``T`` and the traced per-slot
     lengths enter the kernel as an additive bias, so one tuned kernel
     serves every decode step."""
-    B, H, _, D = q.shape
+    B, H, S, D = q.shape
     KVH, T = k.shape[1], k.shape[2]
     G = H // KVH
     rec = _attn_recorder()
@@ -309,21 +313,45 @@ def decode_attention(
         if tuned is not None:
             return tuned
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
-    qg = q.reshape(B, KVH, G, D)
-    s = jnp.einsum("bkgd,bktd->bkgt", qg, k, preferred_element_type=jnp.float32)
+    pos = jnp.arange(T)
+    lv = jnp.broadcast_to(jnp.asarray(length), (B,))
+    if S == 1:
+        qg = q.reshape(B, KVH, G, D)
+        s = jnp.einsum(
+            "bkgd,bktd->bkgt", qg, k, preferred_element_type=jnp.float32
+        )
+        s = s * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = pos[None, :] < lv[:, None]  # (B, T)
+        if window is not None:
+            w = jnp.asarray(window)
+            mask = mask & ((w <= 0) | (pos[None, :] > lv[:, None] - 1 - w))
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgt,bktd->bkgd", p.astype(v.dtype), v)
+        return out.reshape(B, H, 1, D).astype(q.dtype)
+    # chunk queries: per-row lengths walk the causal staircase
+    qg = q.reshape(B, KVH, G, S, D)
+    s = jnp.einsum(
+        "bkgcd,bktd->bkgct", qg, k, preferred_element_type=jnp.float32
+    )
     s = s * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    pos = jnp.arange(T)
-    lv = jnp.broadcast_to(jnp.asarray(length), (B,))
-    mask = pos[None, :] < lv[:, None]  # (B, T)
+    lens = jnp.minimum(
+        lv[:, None] + jnp.arange(S, dtype=lv.dtype)[None, :], T
+    )  # (B, S)
+    mask = pos[None, None, :] < lens[:, :, None]  # (B, S, T)
     if window is not None:
         w = jnp.asarray(window)
-        mask = mask & ((w <= 0) | (pos[None, :] > lv[:, None] - 1 - w))
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
+        mask = mask & (
+            (w <= 0) | (pos[None, None, :] > lens[:, :, None] - 1 - w)
+        )
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,bktd->bkgd", p.astype(v.dtype), v)
-    return out.reshape(B, H, 1, D).astype(q.dtype)
+    out = jnp.einsum("bkgct,bktd->bkgcd", p.astype(v.dtype), v)
+    return out.reshape(B, H, S, D).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

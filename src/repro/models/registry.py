@@ -52,6 +52,9 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return T.decode_step(self.cfg, params, cache, tokens)
 
+    def serve_step(self, params, cache, tokens, valid):
+        return T.serve_step(self.cfg, params, cache, tokens, valid)
+
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

@@ -514,6 +514,189 @@ def prefill(
     return logits, new_cache
 
 
+def page_view(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Gather one layer's page pool through the page table.
+
+    ``pool`` is ``(n_pages, KVH, page_size, D)``; ``table`` is ``(B, P)``
+    physical page ids, where the sentinel value ``n_pages`` (one past the
+    pool) marks unallocated entries — the gather clamps those to the last
+    page, whose contents are never attended to because the per-slot
+    length mask only exposes positions the slot actually wrote.  Returns
+    a ``(B, KVH, P * page_size, D)`` contiguous-looking cache view, so
+    downstream attention (and its tuned ``attention_decode`` dispatch
+    key, static in ``T = P * page_size``) is identical to the slot-pool
+    layout."""
+    B, P = table.shape
+    KVH, ps, D = pool.shape[1:]
+    g = pool[table]  # (B, P, KVH, ps, D); OOB sentinel rows clamp
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, KVH, P * ps, D)
+
+
+def serve_step(
+    cfg: ModelConfig,
+    params: PyTree,
+    cache: PyTree,
+    tokens: jnp.ndarray,
+    valid: jnp.ndarray,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One serving tick: decode lanes and prefill chunks in one program.
+
+    ``tokens`` is ``(B, C)`` — lane ``b`` contributes its next
+    ``valid[b]`` tokens this tick (a decode lane has ``valid == 1`` with
+    its sampled token in column 0; a prefilling lane carries up to ``C``
+    prompt tokens; an idle lane has ``valid == 0`` and touches nothing).
+    Returns logits ``(B, 1, V)`` taken at each lane's last valid position
+    plus the updated cache, and advances ``cache["pos"]`` by ``valid``.
+
+    The cache may be contiguous (``(L, B, KVH, kv_len, D)`` lanes, the
+    ``KVArena`` layout) or paged (``(L, n_pages, KVH, page_size, D)``
+    pools plus ``cache["page_table"]`` ``(B, P)``, the ``PagedKVArena``
+    layout); writes and the attention view read through the page
+    indirection in the latter.  Invalid chunk columns — and any write
+    routed through a sentinel page-table entry, e.g. a released slot —
+    scatter out of bounds and are dropped, so idle lanes can never
+    corrupt pages owned by live requests.  Only pure-attention decoders
+    are supported (SSD state and encoder cross-attention have no
+    variable-width chunk step); ``ServeConfig.resolved_for`` routes other
+    families back to ``decode_step``."""
+    if cfg.attn_free or cfg.ssm_state or cfg.enc_layers:
+        raise NotImplementedError(
+            "serve_step needs a pure-attention decoder; use decode_step"
+        )
+    x = L.embed(tokens, params["embed"]) * math.sqrt(cfg.d_model)
+    B, C = tokens.shape
+    pos_vec = jnp.asarray(cache["pos"], jnp.int32)  # (B,)
+    valid = jnp.asarray(valid, jnp.int32)
+    pos_mat = pos_vec[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    pos = jnp.stack([pos_mat] * 3, axis=-1) if cfg.mrope else pos_mat
+    windows = layer_windows(cfg)
+    paged = "page_table" in cache
+    if paged:
+        table = cache["page_table"]
+        n_pages, _, ps, _ = cache["k"].shape[1:]
+        kv_len = table.shape[1] * ps
+    else:
+        kv_len = cache["k"].shape[3]
+    wp = pos_mat % kv_len  # (B, C) ring write positions
+    cmask = jnp.arange(C, dtype=jnp.int32)[None, :] < valid[:, None]
+    bidx = jnp.arange(B)
+    length = jnp.minimum(pos_vec + 1, kv_len)
+
+    scanned = {key: cache[key] for key in ("k", "v")}
+
+    def layer_step(x, p, w_arg, sc):
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k1, v1 = L.qkv_proj(p["attn"], h, cfg)
+        q = _rope_q(cfg, q, pos)
+        k1 = _rope_q(cfg, k1, pos)
+        kv = k1.transpose(0, 2, 1, 3)  # (B, C, KVH, D)
+        vv = v1.transpose(0, 2, 1, 3)
+        if paged:
+            phys = jnp.take_along_axis(table, wp // ps, axis=1)  # (B, C)
+            phys = jnp.where(cmask, phys, n_pages)
+            K = sc["k"].at[phys, :, wp % ps].set(
+                kv.astype(sc["k"].dtype), mode="drop"
+            )
+            V = sc["v"].at[phys, :, wp % ps].set(
+                vv.astype(sc["v"].dtype), mode="drop"
+            )
+            k_view, v_view = page_view(K, table), page_view(V, table)
+        else:
+            wpos = jnp.where(cmask, wp, kv_len)  # OOB -> dropped
+            K = sc["k"].at[bidx[:, None], :, wpos].set(
+                kv.astype(sc["k"].dtype), mode="drop"
+            )
+            V = sc["v"].at[bidx[:, None], :, wpos].set(
+                vv.astype(sc["v"].dtype), mode="drop"
+            )
+            k_view, v_view = K, V
+        a = L.decode_attention(
+            q, k_view, v_view, length=length,
+            window=w_arg,
+            softcap=cfg.attn_softcap,
+        )
+        a = a.transpose(0, 2, 1, 3).reshape(B, C, cfg.n_heads * cfg.head_dim)
+        a = L.dense_op(a, p["attn"]["wo"])
+        if cfg.post_norms:
+            a = L.rmsnorm(a, p["post_ln1"], cfg.norm_eps)
+        x = x + a
+        if cfg.d_ff:
+            h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+            if cfg.moe_experts:
+                f = L.moe(p["moe"], h2, cfg.moe_top_k, cfg.moe_capacity_factor, act=cfg.act)
+                if cfg.moe_dense_residual:
+                    f = f + L.mlp(p["mlp"], h2, cfg.act)
+            else:
+                f = L.mlp(p["mlp"], h2, cfg.act)
+            if cfg.post_norms:
+                f = L.rmsnorm(f, p["post_ln2"], cfg.norm_eps)
+            x = x + f
+        return x, {"k": K, "v": V}
+
+    # same static-window scan as forward(); see the comment there
+    period = window_period(windows)
+    if period is None:
+
+        def step(carry, inp):
+            p, w, sc = inp
+            return layer_step(carry, p, jnp.where(w > 0, w, 0), sc)
+
+        x, new_scanned = jax.lax.scan(
+            step, x, (params["layers"], windows, scanned)
+        )
+    else:
+        win_static = [int(windows[j]) or None for j in range(period)]
+
+        def step(carry, inp):
+            lp, sc = inp
+            x = carry
+            if period == 1:
+                return layer_step(x, lp, win_static[0], sc)
+            outs = []
+            for j in range(period):
+                pj = jax.tree_util.tree_map(lambda a, j=j: a[j], lp)
+                scj = {key: v[j] for key, v in sc.items()}
+                x, new_scj = layer_step(x, pj, win_static[j], scj)
+                outs.append(new_scj)
+            stacked = {
+                key: jnp.stack([o[key] for o in outs]) for key in outs[0]
+            }
+            return x, stacked
+
+        if period == 1:
+            xs = (params["layers"], scanned)
+        else:
+            xs = (
+                _stack_period(params["layers"], period),
+                {
+                    key: v.reshape(
+                        (v.shape[0] // period, period) + v.shape[1:]
+                    )
+                    for key, v in scanned.items()
+                },
+            )
+        x, new_scanned = jax.lax.scan(step, x, xs)
+        if period > 1:
+            new_scanned = {
+                key: v.reshape((v.shape[0] * period,) + v.shape[2:])
+                for key, v in new_scanned.items()
+            }
+
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    # sample each lane at its last valid position; keeping the gather
+    # before the unembed leaves the dense workload key at m = B, the same
+    # program the tuned decode dispatch already serves
+    idx = jnp.clip(valid - 1, 0, C - 1)
+    xs_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B,1,D)
+    logits = L.unembed(xs_last, params["embed"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_cache = dict(cache)
+    new_cache.update(new_scanned)
+    new_cache["pos"] = pos_vec + valid
+    return logits, new_cache
+
+
 def decode_step(
     cfg: ModelConfig, params: PyTree, cache: PyTree, tokens: jnp.ndarray
 ) -> Tuple[jnp.ndarray, PyTree]:

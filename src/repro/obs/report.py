@@ -261,11 +261,16 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         p_s = sum(float(e.get("dur_s", 0.0)) for e in prefills)
         d_tok = sum(int(e.get("tokens", 0)) for e in decodes)
         d_s = sum(float(e.get("dur_s", 0.0)) for e in decodes)
+        chunked = [e for e in prefills if e.get("chunked")]
         serving = {
             "prefill_tokens": p_tok,
             "prefill_tok_s": round(p_tok / p_s, 2) if p_s > 0 else None,
             "decode_tokens": d_tok,
             "decode_tok_s": round(d_tok / d_s, 2) if d_s > 0 else None,
+            "chunked_prefill_events": len(chunked),
+            "chunked_prefill_tokens": sum(
+                int(e.get("tokens", 0)) for e in chunked
+            ),
         }
         if admits or evicts:
             # scheduler lifecycle: admissions, completions, TTFT/latency
@@ -287,6 +292,32 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
                 serving["latency_s_p50"] = round(lats[len(lats) // 2], 6)
                 serving["latency_s_max"] = round(lats[-1], 6)
 
+    # -- serving router ------------------------------------------------------
+    router: Optional[Dict[str, Any]] = None
+    r_submits = by_type.get("serve.router.submit", [])
+    r_completes = by_type.get("serve.router.complete", [])
+    r_deaths = by_type.get("serve.router.worker_death", [])
+    r_resubmits = by_type.get("serve.router.resubmit", [])
+    if r_submits or r_completes or r_deaths or r_resubmits:
+        rworkers: Dict[str, Dict[str, int]] = {}
+        for e in r_completes:
+            row = rworkers.setdefault(
+                str(e.get("worker", "?")), {"completed": 0, "deaths": 0}
+            )
+            row["completed"] += 1
+        for e in r_deaths:
+            row = rworkers.setdefault(
+                str(e.get("worker", "?")), {"completed": 0, "deaths": 0}
+            )
+            row["deaths"] += 1
+        router = {
+            "submitted": len(r_submits),
+            "completed": len(r_completes),
+            "worker_deaths": len(r_deaths),
+            "resubmits": len(r_resubmits),
+            "workers": rworkers,
+        }
+
     return {
         "benchmark": "tuning_report",
         "n_events": len(events),
@@ -307,6 +338,7 @@ def fold(events: List[Dict[str, Any]], top_n: int = 10) -> Dict[str, Any]:
         "slowest": slowest,
         "rpc": rpc,
         "serving": serving,
+        "serving_router": router,
     }
 
 
@@ -420,6 +452,9 @@ def render_text(report: Dict[str, Any]) -> str:
         add("-- serving --")
         add(f"  prefill: {s['prefill_tokens']} tokens @ "
             f"{s['prefill_tok_s']} tok/s")
+        if s.get("chunked_prefill_events"):
+            add(f"  chunked prefill: {s['chunked_prefill_tokens']} tokens "
+                f"over {s['chunked_prefill_events']} in-tick chunks")
         add(f"  decode:  {s['decode_tokens']} tokens @ "
             f"{s['decode_tok_s']} tok/s")
         if s.get("requests_completed") is not None:
@@ -430,5 +465,14 @@ def render_text(report: Dict[str, Any]) -> str:
             if s.get("latency_s_p50") is not None:
                 add(f"  latency: p50={s['latency_s_p50']}s "
                     f"max={s['latency_s_max']}s")
+        add("")
+    if report.get("serving_router"):
+        r = report["serving_router"]
+        add("-- serving router --")
+        add(f"  submitted={r['submitted']} completed={r['completed']} "
+            f"worker_deaths={r['worker_deaths']} resubmits={r['resubmits']}")
+        for wid, row in sorted(r["workers"].items()):
+            add(f"  worker {wid}: completed={row['completed']} "
+                f"deaths={row['deaths']}")
         add("")
     return "\n".join(lines)

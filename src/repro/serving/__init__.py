@@ -1,3 +1,5 @@
-from .engine import Request, ServingEngine  # noqa: F401
-from .kv import KVArena, SlotPool  # noqa: F401
-from .scheduler import ContinuousBatchingScheduler, ServeRequest  # noqa: F401
+from .config import ServeConfig, coerce_serve_config  # noqa: F401
+from .engine import ServingEngine  # noqa: F401
+from .kv import KVArena, PagedKVArena, SlotPool  # noqa: F401
+from .request import Request, ServeRequest  # noqa: F401
+from .scheduler import ContinuousBatchingScheduler  # noqa: F401

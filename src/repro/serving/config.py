@@ -1,0 +1,166 @@
+"""One config object for the whole serving tier.
+
+:class:`ServeConfig` collapses the loose constructor kwargs that used to
+ride on :class:`~repro.serving.engine.ServingEngine` and
+:class:`~repro.serving.scheduler.ContinuousBatchingScheduler`
+(``max_batch`` / ``n_slots`` / ``max_seq`` / ``seed`` / ``dispatch`` ...)
+into a single dataclass, mirroring the tuning tier's
+:class:`~repro.search.tune.TuneConfig`.  Legacy kwargs keep working
+through :func:`coerce_serve_config` — forwarded onto the config with a
+once-per-process ``DeprecationWarning`` — and unknown kwargs raise
+``TypeError`` like any misspelling would.
+
+The paged-serving knobs live here too: ``page_size`` (tokens per KV
+page), ``total_pages`` (page-pool capacity; admission is gated on free
+pages), ``prefill_chunk`` (prompt tokens processed per scheduler tick,
+interleaved with live decode) and ``token_budget`` (the per-tick token
+quota split between decode lanes and prefill chunks).
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional
+
+
+@dataclass
+class ServeConfig:
+    """One object for a whole serving session.
+
+    ``max_slots`` bounds concurrent decode lanes (the engine's old
+    ``max_batch``, the scheduler's old ``n_slots``).  ``paged=None``
+    auto-enables the paged KV arena when the model supports it (pure
+    attention decoder); ``page_size`` is snapped to a divisor of the
+    cache length at arena construction.  ``prefill_chunk=0`` falls back
+    to the legacy whole-prompt batch=1 prefill outside the decode tick;
+    ``>0`` streams prompts through the tick in chunks of at most that
+    many tokens.  ``token_budget=0`` resolves to
+    ``max_slots + prefill_chunk``.  ``total_pages=0`` sizes the pool for
+    the worst case (``max_slots`` full-length sequences) — smaller pools
+    admit on free pages instead of free slots.
+    """
+
+    max_slots: int = 4
+    max_seq: int = 256
+    paged: Optional[bool] = None
+    page_size: int = 16
+    total_pages: int = 0
+    prefill_chunk: int = 32
+    token_budget: int = 0
+    temperature: float = 0.0
+    seed: int = 0
+    dispatch: Any = None  # Optional[repro.integration.dispatch.DispatchContext]
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.prefill_chunk < 0 or self.token_budget < 0:
+            raise ValueError("prefill_chunk / token_budget must be >= 0")
+
+    def resolved_for(self, cfg) -> "ServeConfig":
+        """Effective config for a model: paged serving and in-tick
+        chunked prefill need a pure-attention decoder (per-page ring
+        writes and variable-width chunk steps have no SSD / encoder
+        cross-attention path), so both degrade gracefully elsewhere."""
+        supported = not (cfg.attn_free or cfg.ssm_state or cfg.enc_layers)
+        out = replace(self)
+        if not supported:
+            if self.paged:  # explicit request, not the auto default
+                _warn_unsupported(cfg.name)
+            out.paged = False
+            out.prefill_chunk = 0
+        elif out.paged is None:
+            out.paged = True
+        return out
+
+    @property
+    def tick_budget(self) -> int:
+        return self.token_budget or (self.max_slots + self.prefill_chunk)
+
+
+# legacy constructor kwarg -> ServeConfig field, for the shim below
+_LEGACY_KWARGS = {
+    "max_batch": "max_slots",   # ServingEngine
+    "n_slots": "max_slots",     # ContinuousBatchingScheduler
+    "max_seq": "max_seq",
+    "seed": "seed",
+    "temperature": "temperature",
+    "dispatch": "dispatch",
+    "page_size": "page_size",
+    "prefill_chunk": "prefill_chunk",
+}
+
+_legacy_warned = False
+_unsupported_warned = False
+
+
+def _warn_unsupported(model_name: str) -> None:
+    global _unsupported_warned
+    if _unsupported_warned:
+        return
+    _unsupported_warned = True
+    warnings.warn(
+        f"paged KV / chunked prefill need a pure-attention decoder; "
+        f"{model_name} falls back to the contiguous slot-pool arena "
+        "with whole-prompt prefill",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
+def coerce_serve_config(
+    config, legacy: Dict[str, Any], caller: str
+) -> ServeConfig:
+    """Normalize ``config`` + legacy kwargs into one :class:`ServeConfig`.
+
+    ``config`` may be a ServeConfig or None.  Legacy kwargs from the old
+    loose-kwarg signatures are forwarded onto the config — with a
+    once-per-process DeprecationWarning — so existing call sites keep
+    working.  Unknown kwargs raise TypeError.  Legacy construction keeps
+    legacy *behavior*: a call spelled through the old kwargs gets the
+    PR 7 slot-pool arena and whole-prompt prefill unless it explicitly
+    passes the new paged knobs.
+    """
+    global _legacy_warned
+    if isinstance(config, ServeConfig):
+        cfg = replace(config)
+    elif config is None:
+        cfg = ServeConfig()
+    else:
+        raise TypeError(
+            f"{caller}() config must be a ServeConfig, "
+            f"got {type(config).__name__}"
+        )
+    if legacy:
+        unknown = sorted(set(legacy) - set(_LEGACY_KWARGS))
+        if unknown:
+            raise TypeError(
+                f"{caller}() got unexpected keyword arguments {unknown}"
+            )
+        if config is not None:
+            raise TypeError(
+                f"{caller}() got both a ServeConfig and legacy kwargs "
+                f"{sorted(legacy)}; move them onto the config"
+            )
+        if not _legacy_warned:
+            _legacy_warned = True
+            warnings.warn(
+                f"passing {sorted(legacy)} to {caller}() as loose kwargs "
+                "is deprecated; pass a ServeConfig instead (e.g. "
+                "config=ServeConfig(max_slots=..., max_seq=...))",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        # old-style construction predates the paged tier: preserve its
+        # behavior exactly unless the caller asked for the new knobs
+        if "page_size" not in legacy and "prefill_chunk" not in legacy:
+            cfg.paged = False
+            cfg.prefill_chunk = 0
+        for k, v in legacy.items():
+            setattr(cfg, _LEGACY_KWARGS[k], v)
+    return cfg

@@ -5,13 +5,20 @@ engine keeps one fixed-shape batch slot per concurrent request so every
 decode step is a single compiled ``decode_step`` call (static shapes; the
 dry-run's ``decode_*`` cells lower exactly this function).  Greedy or
 temperature sampling.
+
+Construction takes a :class:`~repro.serving.config.ServeConfig`
+(``ServingEngine(cfg, params, config=ServeConfig(max_slots=8))``); the
+old loose kwargs (``max_batch`` / ``max_seq`` / ``seed`` / ``dispatch``)
+still work through a warn-once deprecation shim.  The engine always runs
+the contiguous whole-batch layout — the paged arena and in-tick chunked
+prefill live in :class:`~repro.serving.scheduler
+.ContinuousBatchingScheduler`.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,16 +27,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.registry import build_model
 from ..obs import emit, metrics, trace_enabled
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    generated: List[int] = field(default_factory=list)
-    done: bool = False
+from .config import ServeConfig, coerce_serve_config
+from .request import Request
 
 
 class ServingEngine:
@@ -37,21 +36,21 @@ class ServingEngine:
         self,
         cfg: ModelConfig,
         params,
-        max_batch: int = 4,
-        max_seq: int = 256,
-        seed: int = 0,
-        dispatch=None,  # Optional[repro.integration.dispatch.DispatchContext]
+        config: Optional[ServeConfig] = None,
+        **legacy,
     ):
+        self.config = coerce_serve_config(config, legacy, "ServingEngine")
+        sc = self.config
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
-        self.max_batch = max_batch
-        self.max_seq = max_seq
-        self.rng = np.random.default_rng(seed)
+        self.max_batch = sc.max_slots
+        self.max_seq = sc.max_seq
+        self.rng = np.random.default_rng(sc.seed)
         # tuned-kernel dispatch: the context must be active while jit
         # *traces* prefill/decode (shapes are static then); per-engine
         # lambdas keep the jit caches per-context.
-        self.dispatch = dispatch
+        self.dispatch = sc.dispatch
         self._prefill = jax.jit(
             lambda p, c, toks: self.model.prefill(p, c, tokens=toks)
         )
@@ -77,9 +76,13 @@ class ServingEngine:
         return self.stats["decode_tokens"] / s if s > 0 else 0.0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> Request:
+               temperature: Optional[float] = None) -> Request:
+        if temperature is None:
+            temperature = self.config.temperature
         r = Request(len(self._requests), np.asarray(prompt, np.int32),
                     max_new_tokens, temperature)
+        r._pump = self.run
+        r.mark_submitted()
         self._requests.append(r)
         return r
 
@@ -91,9 +94,16 @@ class ServingEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def run(self) -> List[Request]:
-        """Serve all submitted requests in fixed-size batches."""
+        """Serve all submitted requests in fixed-size batches.
+
+        Batches whose requests already finished are skipped, so run()
+        is re-entrant: the streaming ``Request.tokens()`` pump and late
+        ``submit()`` + ``run()`` rounds only pay for unfinished work."""
         for i in range(0, len(self._requests), self.max_batch):
-            self._run_batch(self._requests[i: i + self.max_batch])
+            batch = self._requests[i: i + self.max_batch]
+            if all(r.done for r in batch):
+                continue
+            self._run_batch(batch)
         return self._requests
 
     def _dctx(self):
@@ -132,8 +142,10 @@ class ServingEngine:
             [self._sample(logits[j, 0], r.temperature) for j, r in enumerate(reqs)],
             np.int32,
         )
+        now = time.perf_counter()
         for j, r in enumerate(reqs):
             r.generated.append(int(nxt[j]))
+            r.first_token_s = now
         for j, r in enumerate(reqs):
             r.done = len(r.generated) >= r.max_new_tokens
         max_new = max(r.max_new_tokens for r in reqs)
@@ -182,5 +194,8 @@ class ServingEngine:
                 dur_s=round(dt, 6),
                 tok_s=round(new_tokens / dt, 3) if dt > 0 else None,
             )
+        now = time.perf_counter()
         for r in reqs:
             r.done = True
+            if r.finish_s is None:
+                r.finish_s = now

@@ -1,19 +1,28 @@
-"""Shared fixed-shape KV arena + slot pool for continuous batching.
+"""Shared fixed-shape KV arenas + slot pool for continuous batching.
 
-The arena is one ``init_cache(n_slots, max_seq)`` allocation whose batch
-dimension is the slot pool: every decode step is a single compiled
-``decode_step`` call over all slots (static shapes — the paper's
-static-program contract), while each slot advances independently through
-a per-slot ``(n_slots,)`` position vector.  Admission copies a batch=1
-prefill cache into a free slot lane; release zeroes the lane and returns
-the slot to the free list.  Free lanes keep decoding garbage — their
-output is never sampled and their KV lane is fully overwritten on the
-next admission, so correctness only depends on per-lane row independence
-of the batched ops (masked per-slot attention, row-wise norms/matmuls).
+Two arena layouts share one contract (``cache`` dict + ``positions`` +
+``load_slot`` / ``release_slot``):
+
+* :class:`KVArena` — PR 7's contiguous layout: one ``init_cache(n_slots,
+  max_seq)`` allocation whose batch dimension is the slot pool, a full
+  ``max_seq`` KV lane per slot.
+* :class:`PagedKVArena` — fixed-size pages in a shared pool with a
+  per-slot page table (vLLM-style).  A slot owns only the pages its
+  request can actually reach (``ceil(min(prompt + max_new, kv_len) /
+  page_size)``), so admission is gated on free *pages*, not free slots,
+  and long-prompt worst-case reservation disappears.
+
+Either way every serving tick is a single compiled call over all slots
+(static shapes — the paper's static-program contract), while each slot
+advances independently through a per-slot ``(n_slots,)`` position
+vector.  Free lanes keep computing garbage — their output is never
+sampled, and in the paged layout their page-table row holds the OOB
+sentinel so their cache writes are dropped entirely.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, List
 
 import jax.numpy as jnp
@@ -21,6 +30,20 @@ import jax.numpy as jnp
 # cache entries with a (layers, batch/slot, ...) layout that admission
 # copies lane-by-lane; "pos" (per-slot scalar) is handled separately
 _LANE_KEYS = ("k", "v", "state", "xk", "xv")
+
+
+def snap_page_size(kv_len: int, page_size: int) -> int:
+    """Largest divisor of ``kv_len`` that is ``<= page_size``.
+
+    Keeping pages an exact tiling of the cache length means a slot's
+    gathered page view is exactly ``kv_len`` positions, so the tuned
+    ``attention_decode`` workload key (static in ``t``) matches the
+    contiguous layout's."""
+    if kv_len < 1:
+        return max(1, page_size)
+    return max(
+        d for d in range(1, min(page_size, kv_len) + 1) if kv_len % d == 0
+    )
 
 
 class SlotPool:
@@ -92,11 +115,157 @@ class KVArena:
         )
         self.cache = c
 
-    def release_slot(self, slot: int) -> None:
-        """Zero a lane and reset its position (slot goes back to the pool)."""
+    def release_slot(self, slot: int, used: int = -1) -> None:
+        """Zero a lane and reset its position (slot goes back to the pool).
+
+        ``used`` — how many positions the request actually wrote (its
+        final ``pos``, ring-capped).  Only that prefix is zeroed; the
+        rest of the lane is still zero from the previous release, so a
+        short request no longer pays for scrubbing a full ``max_seq``
+        lane it never touched."""
         c = dict(self.cache)
         for key in _LANE_KEYS:
             if key in c:
-                c[key] = c[key].at[:, slot].set(0)
+                if used >= 0 and key in ("k", "v"):
+                    n = min(used, c[key].shape[3])
+                    c[key] = c[key].at[:, slot, :, :n].set(0)
+                else:
+                    c[key] = c[key].at[:, slot].set(0)
         c["pos"] = c["pos"].at[slot].set(0)
         self.cache = c
+
+
+class PagedKVArena:
+    """Paged KV cache: a shared page pool + per-slot page tables.
+
+    Layout (per ``k`` / ``v``): ``(L, total_pages, KVH, page_size, D)``
+    pools and one ``page_table`` of shape ``(n_slots, pages_per_slot)``
+    holding physical page ids, with the sentinel ``total_pages`` (one
+    past the pool) in unallocated entries — ``serve_step`` scatters
+    through the table with ``mode="drop"`` so sentinel writes vanish,
+    and gathers clamp to garbage that the per-slot length mask never
+    exposes.
+
+    ``page_size`` is snapped down to a divisor of the cache length so a
+    slot's gathered view is exactly ``kv_len`` positions — the tuned
+    ``attention_decode`` workload key (static in ``t = kv_len``) is
+    identical to the contiguous layout's.
+
+    Only pure-attention decoders are supported: SSD state and encoder
+    cross-attention caches have no paged layout here.
+    """
+
+    def __init__(
+        self,
+        model: Any,
+        n_slots: int,
+        max_seq: int,
+        page_size: int = 16,
+        total_pages: int = 0,
+    ):
+        from ..models.transformer import cache_max_len
+
+        cfg = model.cfg
+        if cfg.attn_free or cfg.ssm_state or cfg.enc_layers:
+            raise ValueError(
+                "paged KV arena needs a pure-attention decoder "
+                f"({cfg.name} has SSD state / encoder layers)"
+            )
+        kv_len = cache_max_len(cfg, max_seq)
+        ps = snap_page_size(kv_len, page_size)
+        self.page_size = ps
+        self.pages_per_slot = kv_len // ps
+        self.kv_len = kv_len
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.total_pages = int(total_pages) or n_slots * self.pages_per_slot
+        spec = model.cache_specs(1, max_seq)
+        Ln, _, kvh, _, hd = spec["k"].shape
+        pool = jnp.zeros(
+            (Ln, self.total_pages, kvh, ps, hd), spec["k"].dtype
+        )
+        self.cache: Dict[str, Any] = {
+            "k": pool,
+            "v": jnp.zeros_like(pool),
+            "page_table": jnp.full(
+                (n_slots, self.pages_per_slot), self.total_pages, jnp.int32
+            ),
+            "pos": jnp.zeros((n_slots,), jnp.int32),
+        }
+        self._free: List[int] = list(range(self.total_pages))
+        self._owned: Dict[int, List[int]] = {}
+
+    @property
+    def positions(self) -> jnp.ndarray:
+        return self.cache["pos"]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        """Pages a request reaching ``tokens`` positions needs (ring-capped)."""
+        reach = min(max(int(tokens), 1), self.kv_len)
+        return math.ceil(reach / self.page_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return len(self._free) >= self.pages_needed(tokens)
+
+    def reserve(self, slot: int, tokens: int) -> int:
+        """Claim pages for a request's full reach (prompt + budget) and
+        point the slot's page table at them.  Returns the page count."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        need = self.pages_needed(tokens)
+        if need > len(self._free):
+            raise IndexError(
+                f"page pool exhausted: need {need}, have {len(self._free)}"
+            )
+        self._free.sort()
+        pages = [self._free.pop(0) for _ in range(need)]
+        self._owned[slot] = pages
+        row = jnp.full((self.pages_per_slot,), self.total_pages, jnp.int32)
+        row = row.at[: len(pages)].set(jnp.asarray(pages, jnp.int32))
+        c = dict(self.cache)
+        c["page_table"] = c["page_table"].at[slot].set(row)
+        self.cache = c
+        return need
+
+    def load_slot(self, slot: int, req_cache: Dict[str, Any]) -> None:
+        """Scatter a batch=1 prefill cache into the slot's pages.
+
+        Legacy whole-prompt prefill path (``prefill_chunk=0``): the
+        contiguous ``(L, 1, KVH, kv_len, D)`` lane is resliced into
+        page-sized rows and written to the slot's physical pages;
+        unreserved tail entries hold the sentinel, so their rows drop.
+        """
+        c = dict(self.cache)
+        phys = c["page_table"][slot]  # (P,) with sentinel tail
+        for key in ("k", "v"):
+            lane = req_cache[key][:, 0].astype(c[key].dtype)
+            Ln, kvh, _, hd = lane.shape
+            paged = lane.reshape(
+                Ln, kvh, self.pages_per_slot, self.page_size, hd
+            ).transpose(0, 2, 1, 3, 4)  # (L, P, KVH, ps, D)
+            c[key] = c[key].at[:, phys].set(paged, mode="drop")
+        c["pos"] = c["pos"].at[slot].set(
+            jnp.asarray(req_cache["pos"], jnp.int32)
+        )
+        self.cache = c
+
+    def release_slot(self, slot: int, used: int = -1) -> None:
+        """Return the slot's pages to the free pool, zeroing only them.
+
+        Only pages this request actually owned are scrubbed — not a
+        whole ``max_seq`` lane — and the page-table row reverts to the
+        sentinel so any in-flight lane writes drop."""
+        pages = self._owned.pop(slot, [])
+        c = dict(self.cache)
+        if pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            c["k"] = c["k"].at[:, idx].set(0)
+            c["v"] = c["v"].at[:, idx].set(0)
+        c["page_table"] = c["page_table"].at[slot].set(self.total_pages)
+        c["pos"] = c["pos"].at[slot].set(0)
+        self.cache = c
+        self._free.extend(pages)

@@ -1,37 +1,52 @@
-"""Continuous-batching serving scheduler over a slot-pool KV arena.
+"""Continuous-batching serving scheduler over a shared KV arena.
 
 Replaces the fixed ``max_batch``-stride loop of :class:`ServingEngine`
-with request-level scheduling:
+with request-level scheduling, configured by one
+:class:`~repro.serving.config.ServeConfig`:
 
 * **admission queue** — ``submit()`` enqueues; each tick admits requests
-  into free slots.  Admission prefills the request alone at its exact
-  prompt length (batch=1, no padding — token streams match the
-  sequential baseline bit-for-bit; distinct prompt lengths each compile
-  the prefill jit once) and copies the resulting cache into the slot.
-* **slot pool over a shared KV arena** — one fixed-shape cache whose
-  batch dim is the pool (:mod:`repro.serving.kv`); every decode tick is
-  a single compiled ``decode_step`` over all slots with per-slot
-  positions, so a prefill joins a *live* decode batch without a
-  full-batch barrier and without retracing.
+  into free slots.  Under the paged arena admission is gated on free
+  *pages* (the request's full reach, prompt + generation budget), not
+  just free slots.
+* **paged or slot-pool KV arena** — one fixed-shape cache whose batch
+  dim is the slot pool (:mod:`repro.serving.kv`); every tick is a single
+  compiled model call over all slots with per-slot positions, so a
+  prefill joins a *live* decode batch without a full-batch barrier and
+  without retracing.
+* **in-tick chunked prefill** (``prefill_chunk > 0``) — prompts stream
+  through the same ``serve_step`` program as decode: each tick budgets
+  ``ServeConfig.tick_budget`` tokens, gives every live decode lane one,
+  and splits the remainder over prefilling requests in admission order
+  as chunks of at most ``prefill_chunk`` tokens.  This eliminates the
+  separate batch=1 prefill call and its head-of-line blocking: decode
+  lanes never stall behind a long prompt.
 * **early release / recycling** — a request leaving at
-  ``max_new_tokens`` frees its slot immediately; the next queued request
-  takes it on the following tick while the other lanes keep decoding.
+  ``max_new_tokens`` frees its slot (and pages) immediately; the next
+  queued request takes them on the following tick while the other lanes
+  keep decoding.
 
-Decode runs under the optional DispatchContext, so tuned
+With ``prefill_chunk == 0`` admission prefills the request alone at its
+exact prompt length (batch=1, no padding — token streams match the
+sequential baseline bit-for-bit) and copies the resulting cache into the
+slot, exactly the PR 7 behavior; legacy loose-kwarg construction selects
+this mode.
+
+Ticks run under the optional DispatchContext, so tuned
 ``attention_decode`` / ``dense`` kernels (extracted via
 ``extract_decode_tasks``) serve every generated token.
 
 Observability (``repro.obs``): ``serve.queue_depth`` /
-``serve.slot_utilization`` gauges, ``serve.admit`` / ``serve.evict``
-events, per-request time-to-first-token histogram ``serve.ttft_s``, and
-the same ``serve.prefill`` / ``serve.decode`` events the engine emits.
+``serve.slot_utilization`` / ``serve.free_pages`` gauges,
+``serve.admit`` / ``serve.evict`` events, per-request time-to-first-
+token histogram ``serve.ttft_s``, and the same ``serve.prefill`` /
+``serve.decode`` events the engine emits (chunked prefill tags its
+events with ``chunked=True``).
 """
 
 from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 import jax
@@ -41,35 +56,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.registry import build_model
 from ..obs import emit, metrics, trace_enabled
-from .kv import KVArena, SlotPool
-
-
-@dataclass
-class ServeRequest:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    generated: List[int] = field(default_factory=list)
-    done: bool = False
-    slot: Optional[int] = None
-    submit_s: float = 0.0  # perf_counter timestamps
-    admit_s: Optional[float] = None
-    first_token_s: Optional[float] = None
-    finish_s: Optional[float] = None
-
-    @property
-    def ttft_s(self) -> Optional[float]:
-        """Submit -> first generated token (the prefill sample)."""
-        if self.first_token_s is None:
-            return None
-        return self.first_token_s - self.submit_s
-
-    @property
-    def latency_s(self) -> Optional[float]:
-        if self.finish_s is None:
-            return None
-        return self.finish_s - self.submit_s
+from .config import ServeConfig, coerce_serve_config
+from .kv import KVArena, PagedKVArena, SlotPool
+from .request import Request, ServeRequest  # noqa: F401  (re-export)
 
 
 class ContinuousBatchingScheduler:
@@ -77,18 +66,20 @@ class ContinuousBatchingScheduler:
         self,
         cfg: ModelConfig,
         params,
-        n_slots: int = 4,
-        max_seq: int = 256,
-        seed: int = 0,
-        dispatch=None,  # Optional[repro.integration.dispatch.DispatchContext]
+        config: Optional[ServeConfig] = None,
+        **legacy,
     ):
+        self.config = coerce_serve_config(
+            config, legacy, "ContinuousBatchingScheduler"
+        ).resolved_for(cfg)
+        sc = self.config
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
-        self.n_slots = n_slots
-        self.max_seq = max_seq
-        self.rng = np.random.default_rng(seed)
-        self.dispatch = dispatch
+        self.n_slots = sc.max_slots
+        self.max_seq = sc.max_seq
+        self.rng = np.random.default_rng(sc.seed)
+        self.dispatch = sc.dispatch
         # per-scheduler lambdas keep the jit caches per dispatch context
         # (the context must be active while jit traces, like the engine)
         self._prefill = jax.jit(
@@ -97,16 +88,34 @@ class ContinuousBatchingScheduler:
         self._decode = jax.jit(
             lambda p, c, toks: self.model.decode_step(p, c, toks)
         )
-        self.arena = KVArena(self.model, n_slots, max_seq)
-        self.pool = SlotPool(n_slots)
-        self.queue: Deque[ServeRequest] = deque()
-        self.active: Dict[int, ServeRequest] = {}  # slot -> request
-        self._next_tok = np.zeros((n_slots,), np.int32)
-        self._requests: List[ServeRequest] = []
+        self._serve = jax.jit(
+            lambda p, c, toks, valid: self.model.serve_step(
+                p, c, toks, valid
+            )
+        )
+        # serve_step carries both tick shapes (decode-only and mixed);
+        # the legacy decode_step program is kept for non-paged,
+        # whole-prompt-prefill mode so old call sites stay bit-identical
+        self._use_serve = bool(sc.paged or sc.prefill_chunk > 0)
+        if sc.paged:
+            self.arena = PagedKVArena(
+                self.model, sc.max_slots, sc.max_seq,
+                page_size=sc.page_size, total_pages=sc.total_pages,
+            )
+        else:
+            self.arena = KVArena(self.model, sc.max_slots, sc.max_seq)
+        self.pool = SlotPool(sc.max_slots)
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> decoding request
+        self.prefilling: Dict[int, Request] = {}  # slot -> mid-prompt req
+        self._prefill_order: List[int] = []  # admission order, for budget
+        self._next_tok = np.zeros((sc.max_slots,), np.int32)
+        self._requests: List[Request] = []
         self.stats: Dict[str, float] = {
             "prefill_tokens": 0, "decode_steps": 0, "decode_tokens": 0,
             "prefill_s": 0.0, "decode_s": 0.0,
             "admitted": 0, "released": 0, "peak_active": 0,
+            "prefill_chunks": 0, "mixed_ticks": 0, "pages_reserved": 0,
         }
 
     # -- engine-compatible throughput properties ----------------------------
@@ -125,18 +134,23 @@ class ContinuousBatchingScheduler:
 
     def submit(
         self, prompt: np.ndarray, max_new_tokens: int = 16,
-        temperature: float = 0.0,
-    ) -> ServeRequest:
+        temperature: Optional[float] = None,
+    ) -> Request:
         prompt = np.asarray(prompt, np.int32)
+        if len(prompt) < 1:
+            raise ValueError("prompt must have at least one token")
         if len(prompt) > self.max_seq:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens exceeds max_seq "
                 f"{self.max_seq}"
             )
-        r = ServeRequest(
+        if temperature is None:
+            temperature = self.config.temperature
+        r = Request(
             len(self._requests), prompt, max_new_tokens, temperature,
         )
-        r.submit_s = time.perf_counter()
+        r._pump = self.step
+        r.mark_submitted()
         self._requests.append(r)
         self.queue.append(r)
         metrics().gauge(
@@ -145,8 +159,8 @@ class ContinuousBatchingScheduler:
         return r
 
     def pending(self) -> bool:
-        """True while any request is queued or decoding."""
-        return bool(self.queue or self.active)
+        """True while any request is queued, prefilling, or decoding."""
+        return bool(self.queue or self.prefilling or self.active)
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         if temperature <= 0:
@@ -160,11 +174,44 @@ class ContinuousBatchingScheduler:
 
         return maybe_dispatch(self.dispatch)
 
+    def _can_admit(self, r: Request) -> bool:
+        if not self.pool.free:
+            return False
+        if isinstance(self.arena, PagedKVArena):
+            return self.arena.can_admit(len(r.prompt) + r.max_new_tokens)
+        return True
+
     def _admit_one(self) -> None:
         slot = self.pool.alloc()
         r = self.queue.popleft()
         r.slot = slot
         r.admit_s = time.perf_counter()
+        if isinstance(self.arena, PagedKVArena):
+            self.stats["pages_reserved"] += self.arena.reserve(
+                slot, len(r.prompt) + r.max_new_tokens
+            )
+        m = metrics()
+        m.inc("serve.admit", model=self.cfg.name)
+        self.stats["admitted"] += 1
+        if trace_enabled():
+            emit(
+                "serve.admit",
+                model=self.cfg.name,
+                rid=r.rid,
+                slot=slot,
+                prompt_len=len(r.prompt),
+                queue_wait_s=round(r.admit_s - r.submit_s, 6),
+            )
+        if self.config.prefill_chunk > 0:
+            # prompt streams through the serve tick in chunks
+            r.prefill_done = 0
+            self.prefilling[slot] = r
+            self._prefill_order.append(slot)
+            return
+        self._prefill_whole(slot, r)
+
+    def _prefill_whole(self, slot: int, r: Request) -> None:
+        """Legacy admission: batch=1 exact-length prefill outside the tick."""
         prompt = r.prompt[None, :]  # batch=1, exact length — no padding
         cache = self.model.init_cache(1, max_seq=self.max_seq)
         t0 = time.perf_counter()
@@ -179,7 +226,6 @@ class ContinuousBatchingScheduler:
         m = metrics()
         m.inc("serve.prefill_tokens", len(r.prompt), model=self.cfg.name)
         m.observe("serve.prefill_s", dt, model=self.cfg.name)
-        m.inc("serve.admit", model=self.cfg.name)
         if trace_enabled():
             emit(
                 "serve.prefill",
@@ -191,24 +237,18 @@ class ContinuousBatchingScheduler:
             )
         self.arena.load_slot(slot, cache)
         tok = self._sample(logits[0, 0], r.temperature)
+        self._first_token(slot, r, tok)
+
+    def _first_token(self, slot: int, r: Request, tok: int) -> None:
+        """Prompt fully processed: record TTFT, move the slot to decode."""
         r.generated.append(tok)
         r.first_token_s = time.perf_counter()
-        m.observe("serve.ttft_s", r.ttft_s, model=self.cfg.name)
+        metrics().observe("serve.ttft_s", r.ttft_s, model=self.cfg.name)
         self._next_tok[slot] = tok
         self.active[slot] = r
-        self.stats["admitted"] += 1
         self.stats["peak_active"] = max(
             self.stats["peak_active"], len(self.active)
         )
-        if trace_enabled():
-            emit(
-                "serve.admit",
-                model=self.cfg.name,
-                rid=r.rid,
-                slot=slot,
-                prompt_len=len(r.prompt),
-                queue_wait_s=round(r.admit_s - r.submit_s, 6),
-            )
         if len(r.generated) >= r.max_new_tokens:
             self._release(slot)  # prefill-only request (max_new_tokens=1)
 
@@ -217,7 +257,8 @@ class ContinuousBatchingScheduler:
         r.done = True
         r.finish_s = time.perf_counter()
         r.slot = None
-        self.arena.release_slot(slot)
+        used = int(np.asarray(self.arena.positions[slot]))
+        self.arena.release_slot(slot, used=used)
         self.pool.release(slot)
         self._next_tok[slot] = 0
         self.stats["released"] += 1
@@ -234,22 +275,41 @@ class ContinuousBatchingScheduler:
                 latency_s=round(r.latency_s, 6),
             )
 
+    # -- the tick -----------------------------------------------------------
+
     def step(self) -> bool:
-        """One scheduler tick: admit into free slots, then one decode
-        step over the arena.  Returns True if any work was done."""
+        """One scheduler tick: admit while capacity allows, then one
+        compiled model call over the arena — decode lanes plus (when
+        chunked prefill is on) in-tick prompt chunks under the token
+        budget.  Returns True if any work was done."""
         admitted = False
-        while self.pool.free and self.queue:
+        while self.queue and self._can_admit(self.queue[0]):
             self._admit_one()
             admitted = True
         m = metrics()
         m.gauge("serve.queue_depth", len(self.queue), model=self.cfg.name)
         m.gauge(
             "serve.slot_utilization",
-            len(self.active) / self.n_slots,
+            (len(self.active) + len(self.prefilling)) / self.n_slots,
             model=self.cfg.name,
         )
-        if not self.active:
+        if isinstance(self.arena, PagedKVArena):
+            m.gauge(
+                "serve.free_pages", self.arena.free_pages,
+                model=self.cfg.name,
+            )
+        if not self.active and not self.prefilling:
             return admitted
+        if not self._use_serve:
+            self._decode_tick()
+            return True
+        self._serve_tick()
+        return True
+
+    def _decode_tick(self) -> None:
+        """Legacy tick: one ``decode_step`` over the arena (all prompts
+        were prefilled whole at admission)."""
+        m = metrics()
         t0 = time.perf_counter()
         with self._dctx():
             logits, cache = self._decode(
@@ -286,9 +346,109 @@ class ContinuousBatchingScheduler:
                 dur_s=round(dt, 6),
                 tok_s=round(new_tokens / dt, 3) if dt > 0 else None,
             )
-        return True
 
-    def run(self) -> List[ServeRequest]:
+    def _serve_tick(self) -> None:
+        """Unified tick: every live decode lane gets one token; leftover
+        budget flows to prefilling requests as in-tick chunks."""
+        sc = self.config
+        m = metrics()
+        decode_slots = list(self.active)
+        prefill_budget = max(0, sc.tick_budget - len(decode_slots))
+        width = 1
+        if self.prefilling and prefill_budget > 0 and sc.prefill_chunk > 0:
+            width = sc.prefill_chunk
+        toks = np.zeros((self.n_slots, width), np.int32)
+        valid = np.zeros((self.n_slots,), np.int32)
+        for slot in decode_slots:
+            toks[slot, 0] = self._next_tok[slot]
+            valid[slot] = 1
+        chunked: List[tuple] = []
+        if width > 1:
+            left = prefill_budget
+            for slot in list(self._prefill_order):
+                if left <= 0:
+                    break
+                r = self.prefilling[slot]
+                n = min(width, len(r.prompt) - r.prefill_done, left)
+                if n <= 0:
+                    continue
+                toks[slot, :n] = r.prompt[
+                    r.prefill_done:r.prefill_done + n
+                ]
+                valid[slot] = n
+                left -= n
+                chunked.append((slot, n))
+        t0 = time.perf_counter()
+        with self._dctx():
+            logits, cache = self._serve(
+                self.params, self.arena.cache,
+                jnp.asarray(toks), jnp.asarray(valid),
+            )
+        self.arena.cache = dict(cache)
+        la = np.asarray(logits[:, 0].astype(jnp.float32))
+        dt = time.perf_counter() - t0
+        # prompt chunks advance; a finished prompt samples its first token
+        # from this very tick (its sample position was the chunk's last)
+        ptoks = 0
+        for slot, n in chunked:
+            r = self.prefilling[slot]
+            r.prefill_done += n
+            ptoks += n
+            if r.prefill_done >= len(r.prompt):
+                del self.prefilling[slot]
+                self._prefill_order.remove(slot)
+                self._first_token(slot, r, self._sample(la[slot], r.temperature))
+        for slot in decode_slots:
+            r = self.active[slot]
+            tok = self._sample(la[slot], r.temperature)
+            r.generated.append(tok)
+            self._next_tok[slot] = tok
+            if len(r.generated) >= r.max_new_tokens:
+                self._release(slot)
+        # attribute the tick's wall time to decode/prefill by token share
+        n_decode = len(decode_slots)
+        total = n_decode + ptoks
+        if total:
+            self.stats["decode_s"] += dt * n_decode / total
+            self.stats["prefill_s"] += dt * ptoks / total
+        self.stats["decode_tokens"] += n_decode
+        self.stats["prefill_tokens"] += ptoks
+        self.stats["prefill_chunks"] += len(chunked)
+        if n_decode:
+            self.stats["decode_steps"] += 1
+            m.inc("serve.decode_tokens", n_decode, model=self.cfg.name)
+            m.observe("serve.decode_step_s", dt, model=self.cfg.name)
+            m.gauge(
+                "serve.decode_tok_s", self.decode_tok_s,
+                model=self.cfg.name,
+            )
+        if chunked:
+            m.inc("serve.prefill_tokens", ptoks, model=self.cfg.name)
+            if n_decode:
+                self.stats["mixed_ticks"] += 1
+        if trace_enabled():
+            if n_decode:
+                emit(
+                    "serve.decode",
+                    model=self.cfg.name,
+                    batch=n_decode,
+                    steps=1,
+                    tokens=n_decode,
+                    dur_s=round(dt, 6),
+                    tok_s=round(n_decode / dt, 3) if dt > 0 else None,
+                )
+            if chunked:
+                emit(
+                    "serve.prefill",
+                    model=self.cfg.name,
+                    batch=len(chunked),
+                    tokens=ptoks,
+                    dur_s=round(dt, 6),
+                    chunked=True,
+                    tok_s=round(ptoks / dt, 3) if dt > 0 else None,
+                )
+
+    def run(self) -> List[Request]:
         """Drain the queue: tick until every request completes."""
         while self.pending():
             self.step()
